@@ -1,0 +1,57 @@
+"""Assignment roofline table: every (arch x shape) baseline from the
+dry-run cache (experiments/dryrun/), plus hillclimbed variants if present.
+
+Run ``python -m repro.launch.dryrun --mesh both`` first (hours of compiles
+are cached incrementally); this bench only reads the JSON records."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(mesh: str = "pod"):
+    rows = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return [{"note": f"no dry-run cache at {d}; run repro.launch.dryrun"}]
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec["status"] == "skipped":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "tag": rec.get("tag", ""), "status": "skipped",
+                         "dominant": "-", "compute_s": 0.0, "memory_s": 0.0,
+                         "collective_s": 0.0, "roofline_frac": 0.0,
+                         "useful_flops": 0.0, "hbm_gb_per_dev": 0.0})
+            continue
+        if rec["status"] != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "tag": rec.get("tag", ""), "status": "ERROR",
+                         "dominant": rec.get("error", "?")[:40],
+                         "compute_s": 0, "memory_s": 0, "collective_s": 0,
+                         "roofline_frac": 0, "useful_flops": 0,
+                         "hbm_gb_per_dev": 0})
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory_analysis", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0)) / 1e9
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "tag": rec.get("tag", ""), "status": "ok",
+            "dominant": r["dominant"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "roofline_frac": r["roofline_fraction"],
+            "useful_flops": r["useful_flops_ratio"],
+            "hbm_gb_per_dev": hbm,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run("pod"), "Roofline baselines (single pod 16x16)")
+    emit(run("multipod"), "Roofline baselines (2 pods, 2x16x16)")

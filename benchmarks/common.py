@@ -1,0 +1,36 @@
+"""Shared benchmark helpers: timing, CSV row emission."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List
+
+
+def timeit(fn: Callable, *, warmup: int = 2, trials: int = 5) -> Dict:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return {"mean_s": statistics.mean(ts),
+            "std_s": statistics.stdev(ts) if len(ts) > 1 else 0.0,
+            "min_s": min(ts), "trials": trials}
+
+
+def emit(rows: List[Dict], title: str) -> None:
+    print(f"\n## {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

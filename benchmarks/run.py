@@ -1,0 +1,62 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+SUITES = [
+    ("table2_migration", "bench_migration",
+     "Table 2: reconfiguration controller throughput"),
+    ("fig7a_hbm_striping", "bench_hbm_striping",
+     "Fig 7a: throughput scaling with HBM channels"),
+    ("fig7b_build_flow", "bench_build_flow",
+     "Fig 7b: shell flow vs app flow build times"),
+    ("table3_reconfig", "bench_reconfig",
+     "Table 3: shell reconfiguration latency"),
+    ("fig8_multitenant", "bench_multitenant",
+     "Fig 8: multi-tenant AES ECB fair sharing"),
+    ("fig10_cthreads", "bench_cthreads",
+     "Fig 10: AES CBC cThread scaling"),
+    ("fig11_hll", "bench_hll",
+     "Fig 11: HLL with on-demand reconfiguration"),
+    ("fig12_nn", "bench_nn_inference",
+     "Fig 12: NN inference Coyote vs staged-copy"),
+    ("llm_serving", "bench_serving",
+     "LLM serving: continuous batching on paged KV"),
+    ("multipod_collectives", "bench_multipod",
+     "Multi-pod: flat vs hierarchical all-reduce schedules"),
+    ("roofline", "bench_roofline",
+     "Assignment roofline table (from dry-run cache)"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for name, module, title in SUITES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["run"])
+            rows = mod.run()
+            emit(rows, f"{title}  [{time.perf_counter()-t0:.1f}s]")
+        except Exception:
+            failures += 1
+            print(f"\n## {title}\nFAILED:", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

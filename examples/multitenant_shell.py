@@ -1,0 +1,77 @@
+"""Scenario: one shell, three tenants, live reconfiguration.
+
+Walks the paper's headline features in one script:
+  1. build a shell with MMU + AES + sniffer services;
+  2. load three different apps into three vFPGA slots (AES-ECB tenant,
+     HyperLogLog tenant, vector-add tenant);
+  3. run cThread traffic through the credit-scheduled link while the
+     sniffer captures packets;
+  4. hot-swap ONE app (partial reconfiguration) while the others stay
+     loaded;
+  5. reconfigure the SHELL (drop the sniffer) without stranding any app;
+  6. print the capture + fairness + status reports.
+
+    PYTHONPATH=src python examples/multitenant_shell.py
+"""
+import numpy as np
+
+from repro.apps import (make_aes_artifact, make_hll_artifact,
+                        make_passthrough_artifact, make_vector_add_artifact)
+from repro.core import Alloc, Oper, SgEntry, Shell, ShellConfig
+from repro.core.credits import jains_index
+from repro.core.services import (AESConfig, MMUConfig, SnifferConfig)
+from repro.core.services.sniffer import CSR_SNIFFER_ENABLE
+
+# 1. build
+shell = Shell(ShellConfig.make(services={
+    "mmu": MMUConfig(page_size=256, n_pages=512),
+    "encryption": AESConfig(),
+    "sniffer": SnifferConfig(headers_only=False),
+}, n_vfpgas=3))
+report = shell.build()
+print(f"shell built in {report.total_s:.2f}s:",
+      sorted(report.components))
+
+# 2. three tenants
+shell.load_app(0, make_aes_artifact("ecb"))
+shell.load_app(1, make_hll_artifact())
+shell.load_app(2, make_vector_add_artifact())
+sniffer = shell.services.get("sniffer")
+sniffer.csr.set_csr(1, CSR_SNIFFER_ENABLE)       # start capture via CSR
+
+# 3. concurrent traffic
+threads = [shell.attach_thread(i, pid=100 + i) for i in range(3)]
+bufs = []
+for ct in threads:
+    src = ct.getMem((Alloc.HPF, 64 << 10))
+    src[:] = np.random.RandomState(ct.tid).randint(0, 255, src.size,
+                                                   dtype=np.uint8)
+    bufs.append(src)
+    ct.invoke(Oper.LOCAL_TRANSFER,
+              SgEntry(src=ct.vaddr_of(src), length=src.size), wait=False)
+shell.drain()
+shares = shell.arbiter.fairness()
+print(f"fair shares: { {k: round(v, 3) for k, v in shares.items()} } "
+      f"jain={jains_index(shares):.4f}")
+
+# 4. app hot-swap: replace the vector-add tenant, others untouched
+stats = shell.reconfigure_app(2, make_passthrough_artifact())
+print(f"app hot-swap: {stats['kernel_s']*1e3:.1f} ms "
+      f"(cache_hit={bool(stats['compile_cache_hit'])}); "
+      f"slot0 still: {shell.vfpgas[0].app.name}")
+
+# 5. shell reconfig: drop the sniffer (scenario #3 of Table 3)
+lat = shell.reconfigure_shell(ShellConfig.make(services={
+    "mmu": MMUConfig(page_size=256, n_pages=512),
+    "encryption": AESConfig(),
+}, n_vfpgas=3))
+print(f"shell reconfig (sniffer off): kernel {lat['kernel_s']*1e3:.1f} ms; "
+      f"services now: {shell.services.names()}")
+
+# 6. reports
+records = sniffer.to_records()
+print(f"sniffer captured {len(records)} packets; first 3:")
+for r in records[:3]:
+    print("  ", r)
+print("final status:", {k: v for k, v in shell.status().items()
+                        if k in ("fairness", "link_bytes")})

@@ -1,0 +1,24 @@
+"""Quickstart: deploy a neural network through the shell in <10 lines.
+
+The paper's Code 3 claim — GPU-like UX for FPGA-class infrastructure:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.apps import CoyoteOverlay
+from repro.core import Shell, ShellConfig
+from repro.core.services import MMUConfig
+
+# --- the <10 lines -----------------------------------------------------------
+shell = Shell(ShellConfig.make(services={"mmu": MMUConfig()}))
+shell.build()                                    # synthesize the shell once
+overlay = CoyoteOverlay(shell, slot=0)           # the NN "overlay"
+overlay.program_fpga()                           # partial reconfiguration
+X = np.random.randn(1024, 593).astype(np.float32)
+pred = overlay.predict(X, batch_size=256)        # streamed inference
+# -----------------------------------------------------------------------------
+
+print("predictions:", pred.shape, "| first 4:", pred[:4, 0].round(3))
+print("slot status:", shell.vfpgas[0].status())
+print("compile cache:", shell.static.compile_cache.stats())

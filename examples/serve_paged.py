@@ -1,0 +1,42 @@
+"""Scenario: LLM serving with batched requests on the paged-KV MMU.
+
+The paper's LLM-decode observation (Fig 1) end-to-end: requests from
+multiple cThreads share one decode pipeline; the MMU pages the KV cache
+(variable page size), pages fault/evict under pressure, and continuous
+batching keeps the pipeline full.
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.services.mmu import MMU, MMUConfig
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+
+cfg = get_config("smollm-135m").reduced()
+params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+
+# deliberately tight page pool: exercises fault/evict under pressure
+mmu = MMU(MMUConfig(page_size=16, n_pages=96, tlb_entries=32, tlb_assoc=4))
+engine = ServingEngine(cfg, params, mmu, max_batch=4, max_len=128)
+
+rng = np.random.RandomState(0)
+for i in range(10):
+    plen = int(rng.randint(5, 40))
+    engine.submit(rng.randint(3, cfg.vocab_size, plen).tolist(),
+                  max_new_tokens=int(rng.randint(4, 16)),
+                  temperature=0.0 if i % 2 else 0.8, tid=i)
+
+stats = engine.run()
+print("engine:", {k: (round(v, 2) if isinstance(v, float) else v)
+                  for k, v in stats.items()})
+print("mmu:", mmu.utilization())
+for r in engine.completed[:3]:
+    print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+assert stats["completed"] == 10
+assert mmu.utilization()["pages_used"] == 0, "all pages must be freed"
+print("OK: all requests served, pages reclaimed")

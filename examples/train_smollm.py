@@ -1,0 +1,57 @@
+"""End-to-end driver: train a ~100M-parameter model for a few hundred steps.
+
+smollm-135m at full width/depth (135M params — the deliverable's ~100M
+model), shortened sequence for CPU wall-clock, with the production loop:
+async checkpoints, an injected node failure + auto-restart, a straggler
+host, and int8+EF gradient compression on the DP path.
+
+    PYTHONPATH=src python examples/train_smollm.py [--steps 300]
+
+(~2 s/step on this CPU container at seq 256/batch 8; trims to --steps 40
+for a quick look.)
+"""
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.services.compression import (CompressionConfig,
+                                             GradCompression)
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-135m")          # full 135M-param config
+    print(f"training {cfg.arch_id}: {cfg.n_params()/1e6:.0f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model}")
+    shape = ShapeConfig("e2e", "train", args.seq_len, args.batch)
+    tcfg = TrainConfig(
+        steps=args.steps,
+        log_every=max(args.steps // 10, 1),
+        ckpt_every=max(args.steps // 4, 10),
+        ckpt_dir="/tmp/coyote_e2e_smollm",
+        fail_at_step=args.steps // 2,        # injected failure -> restart
+        straggler_steps=(args.steps // 3,),  # one slow host batch
+        straggler_delay_s=1.0,
+        batch_timeout_s=0.5,
+        compression=GradCompression(CompressionConfig(bits=8)),
+        opt=AdamWConfig(lr=6e-4, warmup_steps=10, total_steps=args.steps),
+        seed=0)
+    trainer = Trainer(cfg, shape, tcfg)
+    result = trainer.run()
+    print(json.dumps(result, indent=1))
+    print("loss curve:", [round(m["loss"], 3) for m in trainer.metrics_log])
+    assert result["restarts"] == 1, "failure injection should trigger once"
+    first, last = trainer.metrics_log[0]["loss"], trainer.metrics_log[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} ({'OK: decreasing' if last < first else 'WARN'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""vFPGA applications: the paper's evaluation workloads as slot-loadable
+artifacts (AES ECB/CBC, HyperLogLog, NN inference, vector-add)."""
+from repro.apps.aes import make_aes_artifact
+from repro.apps.hll import (hll_count, hll_estimate, hll_merge, hll_sketch,
+                            make_hll_artifact)
+from repro.apps.nn_inference import CoyoteOverlay, MLPConfig, StagedCopyBaseline
+from repro.apps.vector_add import make_passthrough_artifact, make_vector_add_artifact
+
+__all__ = [
+    "make_aes_artifact", "hll_count", "hll_estimate", "hll_sketch",
+    "hll_merge", "make_hll_artifact", "CoyoteOverlay", "MLPConfig", "StagedCopyBaseline",
+    "make_passthrough_artifact", "make_vector_add_artifact",
+]

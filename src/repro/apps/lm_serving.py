@@ -1,0 +1,80 @@
+"""LM serving as a vFPGA app: the paper's Fig 1 end-to-end.
+
+The serving engine (continuous batching on the MMU's paged KV) mounts in a
+shell slot behind the unified interface: cThreads submit prompts through
+``invoke``, the engine fills the decode pipeline across concurrent TIDs,
+completions raise user interrupts, and CSRs control sampling.
+
+    shell = Shell(ShellConfig.make(services={"mmu": MMUConfig(...)}))
+    shell.build()
+    shell.load_app(0, make_lm_serving_artifact(cfg, params))
+    ct = shell.attach_thread(0, pid)
+    out = ct.invoke(Oper.KERNEL, SgEntry(src=prompt_ids, meta={...}))
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.services.base import ServiceRequirement
+from repro.core.vfpga import AppArtifact
+
+CSR_TEMPERATURE_MILLI = 0x10      # temperature * 1000
+CSR_MAX_NEW_TOKENS = 0x11
+
+
+class _EngineHolder:
+    """Lazily builds one ServingEngine per vFPGA slot, bound to the
+    shell's MMU service (the app 'links against' the service)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._engines: Dict[int, Any] = {}
+
+    def engine(self, vfpga):
+        slot = vfpga.slot
+        if slot not in self._engines:
+            from repro.serve.engine import ServingEngine
+            mmu = vfpga.shell.services.get("mmu")
+            if mmu is None:
+                raise RuntimeError("lm_serving requires the mmu service")
+            self._engines[slot] = ServingEngine(
+                self.cfg, self.params, mmu, max_batch=self.max_batch,
+                max_len=self.max_len)
+        return self._engines[slot]
+
+    def __call__(self, iface, vfpga, prompt) -> List[int]:
+        eng = self.engine(vfpga)
+        temp = iface.csr.get_csr(CSR_TEMPERATURE_MILLI, 0) / 1000.0
+        max_new = iface.csr.get_csr(CSR_MAX_NEW_TOKENS, 8)
+        toks = np.asarray(prompt).reshape(-1)
+        toks = toks.view(np.int32) if toks.dtype == np.uint8 else toks
+        rid = eng.submit([int(t) for t in toks if t > 0],
+                         max_new_tokens=int(max_new), temperature=temp)
+        while eng.pending():
+            eng.step()
+        req = next(r for r in eng.completed if r.rid == rid)
+        iface.irq.raise_irq(rid)           # completion interrupt
+        return req.out_tokens
+
+
+def make_lm_serving_artifact(cfg: ModelConfig, params, *,
+                             max_batch: int = 4,
+                             max_len: int = 256) -> AppArtifact:
+    holder = _EngineHolder(cfg, params, max_batch=max_batch,
+                           max_len=max_len)
+    return AppArtifact(
+        name="lm_serving",
+        fn=holder,
+        requires=[ServiceRequirement("mmu", {"min_page_size": 1})],
+        config_repr={"arch": cfg.arch_id, "max_batch": max_batch,
+                     "max_len": max_len})

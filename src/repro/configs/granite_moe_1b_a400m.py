@@ -1,0 +1,20 @@
+"""granite-moe-1b-a400m — 32-expert top-8 MoE.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+24L d_model=1024 16H (GQA kv=8) d_ff=512 vocab=49155, MoE 32e top-8
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=512,               # per-expert FFN width
+    vocab_size=49155,
+    head_dim=64,
+    moe=MoEConfig(n_experts=32, top_k=8, d_ff_expert=512),
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

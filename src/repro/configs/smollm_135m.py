@@ -1,0 +1,20 @@
+"""smollm-135m — llama-arch small dense LM.
+[hf:HuggingFaceTB/SmolLM-135M; hf]
+30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    head_dim=64,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)

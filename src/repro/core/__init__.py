@@ -1,0 +1,17 @@
+"""Coyote-JAX core: the paper's three-layer shell in JAX.
+
+Static layer (never reconfigured) / dynamic layer (reconfigurable services)
+/ application layer (vFPGA slots + cThreads), with credit-based fair
+sharing, run-time reconfiguration, and a unified multi-stream interface.
+"""
+from repro.core.cthread import Alloc, CThread
+from repro.core.interfaces import (AppInterface, Completion, Oper, SgEntry)
+from repro.core.shell import BuildReport, Shell, ShellConfig
+from repro.core.static_layer import StaticLayer, TransferEngine
+from repro.core.vfpga import AppArtifact, VFpga
+
+__all__ = [
+    "Alloc", "CThread", "AppInterface", "Completion", "Oper", "SgEntry",
+    "BuildReport", "Shell", "ShellConfig", "StaticLayer", "TransferEngine",
+    "AppArtifact", "VFpga",
+]

@@ -1,0 +1,95 @@
+"""Bitstream packaging + the two build flows (paper §4, §9.2, §9.3).
+
+A "partial bitstream" here is a serialized artifact blob: the shell config
+(for shell bitstreams) or an app artifact with its weights (for app
+bitstreams).  ``ReconfigController.load_bitstream`` streams them from disk
+through the utility channel; :class:`repro.core.shell.Shell` applies them.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.shell import Shell, ShellConfig
+from repro.core.vfpga import AppArtifact
+
+
+def save_shell_bitstream(path: str, config: ShellConfig,
+                         weights: Any = None) -> int:
+    """Write a shell 'partial bitstream' (config + optional weight arrays)."""
+    arrays = None
+    if weights is not None:
+        arrays = jax.tree.map(np.asarray, weights)
+    payload = {"kind": "shell", "config": config, "arrays": arrays}
+    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+    Path(path).write_bytes(blob)
+    return len(blob)
+
+
+def save_app_bitstream(path: str, artifact: AppArtifact) -> int:
+    """Write an app 'partial bitstream'.  The fn is stored by reference
+    (module:qualname) — user logic is code, weights are data."""
+    payload = {
+        "kind": "app",
+        "name": artifact.name,
+        "version": artifact.version,
+        "fn_ref": f"{artifact.fn.__module__}:{artifact.fn.__qualname__}",
+        "arrays": (jax.tree.map(np.asarray, artifact.weights)
+                   if artifact.weights is not None else None),
+        "requires": artifact.requires,
+        "config_repr": artifact.config_repr,
+    }
+    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+    Path(path).write_bytes(blob)
+    return len(blob)
+
+
+def load_app_bitstream(path: str) -> AppArtifact:
+    payload = pickle.loads(Path(path).read_bytes())
+    assert payload["kind"] == "app"
+    mod_name, qual = payload["fn_ref"].split(":")
+    import importlib
+    fn = importlib.import_module(mod_name)
+    for part in qual.split("."):
+        fn = getattr(fn, part)
+    return AppArtifact(name=payload["name"], fn=fn,
+                       version=payload["version"],
+                       weights=payload["arrays"],
+                       requires=payload["requires"],
+                       config_repr=payload["config_repr"])
+
+
+@dataclass
+class FlowTiming:
+    flow: str
+    build_s: float
+    components: Dict[str, Dict[str, float]]
+    cache_hits: int
+
+
+def shell_flow(config: ShellConfig, *, static=None, mesh=None
+               ) -> Tuple[Shell, FlowTiming]:
+    """Full flow: synthesize services AND slots from scratch."""
+    shell = Shell(config, static=static, mesh=mesh)
+    t0 = time.perf_counter()
+    report = shell.build(flow="shell")
+    dt = time.perf_counter() - t0
+    return shell, FlowTiming("shell", dt, report.components,
+                             report.cache_hits)
+
+
+def app_flow(shell: Shell, slot: int, artifact: AppArtifact
+             ) -> Tuple[Dict[str, float], FlowTiming]:
+    """Nested flow: link ONE app against the already-routed shell.  The
+    service artifacts hit the compile cache; only the app compiles."""
+    t0 = time.perf_counter()
+    stats = shell.load_app(slot, artifact)
+    dt = time.perf_counter() - t0
+    return stats, FlowTiming("app", dt, {artifact.name: stats},
+                             int(stats.get("compile_cache_hit", 0)))

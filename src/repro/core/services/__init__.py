@@ -1,0 +1,16 @@
+"""Dynamic-layer services: reusable, reconfigurable shell infrastructure."""
+from repro.core.services.base import Service, ServiceRegistry, ServiceRequirement
+from repro.core.services.collectives import CollectiveConfig, CollectiveService
+from repro.core.services.compression import CompressionConfig, GradCompression
+from repro.core.services.encryption import AESConfig, AESService
+from repro.core.services.mmu import MMU, MMUConfig, PageFaultError, TLB
+from repro.core.services.sniffer import SnifferConfig, TrafficSniffer
+
+__all__ = [
+    "Service", "ServiceRegistry", "ServiceRequirement",
+    "CollectiveConfig", "CollectiveService",
+    "CompressionConfig", "GradCompression",
+    "AESConfig", "AESService",
+    "MMU", "MMUConfig", "PageFaultError", "TLB",
+    "SnifferConfig", "TrafficSniffer",
+]

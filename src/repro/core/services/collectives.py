@@ -1,0 +1,118 @@
+"""Collective service: the RoCE-v2 RDMA stack analogue (paper §6.2).
+
+BALBOA gives Coyote v2 a reusable, reconfigurable 100G networking service
+that talks to commodity fabrics.  On a TPU pod the fabric is ICI and the
+"stack" is the collective schedule.  This service owns:
+
+  * schedule selection — flat ring vs hierarchical (reduce-scatter intra-pod,
+    all-reduce across the `pod` axis, all-gather back), switchable at run
+    time like swapping TCP/IP <-> RDMA in the paper;
+  * shard_map-level primitives usable inside pjit programs;
+  * an RDMA-style queue-pair registry (connect/send semantics over
+    collective_permute) used for pod-to-pod hand-off;
+  * wire-byte estimates per schedule for the roofline analysis.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.services.base import Service
+
+
+@dataclass(frozen=True)
+class CollectiveConfig:
+    schedule: str = "auto"        # auto | flat | hierarchical
+    data_axis: str = "data"
+    pod_axis: str = "pod"
+    # chunk (bytes) for bucketed gradient reduction overlap
+    bucket_bytes: int = 32 << 20
+
+
+class CollectiveService(Service):
+    NAME = "collectives"
+
+    def __init__(self, config: CollectiveConfig = CollectiveConfig()):
+        super().__init__(config)
+        self._qps: Dict[int, Tuple[int, int]] = {}   # qp id -> (src, dst)
+        self._next_qp = 1
+
+    # -- schedule selection ---------------------------------------------------
+    def pick_schedule(self, mesh) -> str:
+        c: CollectiveConfig = self.config
+        if c.schedule != "auto":
+            return c.schedule
+        return ("hierarchical" if c.pod_axis in mesh.axis_names
+                else "flat")
+
+    # -- shard_map primitives ---------------------------------------------------
+    def all_reduce(self, x, mesh) -> jnp.ndarray:
+        """Schedule-aware all-reduce for use INSIDE shard_map bodies."""
+        sched = self.pick_schedule(mesh)
+        c: CollectiveConfig = self.config
+        if sched == "hierarchical" and c.pod_axis in mesh.axis_names:
+            return self._hierarchical_ar(x, c.data_axis, c.pod_axis)
+        axes = tuple(a for a in (c.pod_axis, c.data_axis)
+                     if a in mesh.axis_names)
+        return jax.lax.psum(x, axes)
+
+    @staticmethod
+    def _hierarchical_ar(x, data_axis: str, pod_axis: str):
+        """reduce-scatter(data) -> all-reduce(pod) -> all-gather(data).
+
+        Inter-pod traffic drops by the data-axis size versus a flat
+        all-reduce over (pod, data): only 1/|data| of the tensor crosses
+        the pod boundary."""
+        orig_shape = x.shape
+        n_elems = int(np.prod(orig_shape)) if orig_shape else 1
+        flat = x.reshape(-1)
+        n = jax.lax.psum(1, data_axis)
+        pad = (-flat.shape[0]) % n
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        part = jax.lax.psum_scatter(flat, data_axis, scatter_dimension=0,
+                                    tiled=True)
+        part = jax.lax.psum(part, pod_axis)
+        full = jax.lax.all_gather(part, data_axis, axis=0, tiled=True)
+        return full[:n_elems].reshape(orig_shape)
+
+    # -- QP registry (RDMA verbs analogue) --------------------------------------
+    def create_qp(self, src_pod: int, dst_pod: int) -> int:
+        qp = self._next_qp
+        self._next_qp += 1
+        self._qps[qp] = (src_pod, dst_pod)
+        return qp
+
+    def qp_permutation(self, qp: int, n_pods: int) -> List[Tuple[int, int]]:
+        """collective_permute pairs implementing this QP's one-way write."""
+        src, dst = self._qps[qp]
+        return [(src, dst)]
+
+    def rdma_write(self, x, qp: int, *, pod_axis: Optional[str] = None):
+        """One-sided write to the peer pod (inside shard_map over `pod`)."""
+        c: CollectiveConfig = self.config
+        perm = self.qp_permutation(qp, 2)
+        return jax.lax.ppermute(x, pod_axis or c.pod_axis, perm)
+
+    # -- roofline estimates -------------------------------------------------------
+    @staticmethod
+    def wire_bytes(schedule: str, nbytes: int, data: int, pods: int,
+                   pod_links: int = 1) -> Dict[str, float]:
+        """Modeled per-device wire bytes for an all-reduce of `nbytes`."""
+        if schedule == "flat":
+            g = data * pods
+            return {"intra": 2 * (g - 1) / g * nbytes, "inter": 0.0}
+        rs = (data - 1) / data * nbytes
+        ag = (data - 1) / data * nbytes
+        inter = 2 * (pods - 1) / pods * (nbytes / data)
+        return {"intra": rs + ag, "inter": inter}
+
+    def status(self) -> Dict[str, Any]:
+        s = super().status()
+        s["open_qps"] = len(self._qps)
+        return s

@@ -1,0 +1,118 @@
+"""Gradient-compression service (paper Req. 1 names "compression cores").
+
+Distributed-optimization trick for 1000+-node DP: gradients crossing the
+slow (inter-pod) links are quantized to int8 with per-block scales and an
+error-feedback accumulator, optionally top-k sparsified.  The service is
+reconfigurable at run time (swap bits / block / top-k without touching the
+apps), and the trainer consumes it as ``apply(grads, state)``.
+
+All math is pure-jnp + jit so it fuses into the train step.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.services.base import Service
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8                 # 8 -> int8 quantization
+    block: int = 256              # elements per scale block
+    error_feedback: bool = True
+    topk_frac: float = 0.0        # 0 -> dense; 0.01 -> keep top 1%
+
+
+def _quantize_blockwise(x: jnp.ndarray, block: int, bits: int):
+    """x (flat,) fp32 -> (q int8, scales fp32 (nblocks,))."""
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    xb = x.reshape(-1, block)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale[:, 0], n
+
+
+def _dequantize_blockwise(q, scale, n: int):
+    x = q.astype(jnp.float32) * scale[:, None]
+    return x.reshape(-1)[:n]
+
+
+def _topk_mask(x: jnp.ndarray, frac: float):
+    k = max(int(x.shape[0] * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+class GradCompression(Service):
+    NAME = "compression"
+
+    def __init__(self, config: CompressionConfig = CompressionConfig()):
+        super().__init__(config)
+        self._apply_jit = None
+
+    def init_state(self, params) -> Any:
+        """Error-feedback residuals, one per leaf (zeros)."""
+        if not self.config.error_feedback:
+            return None
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress_leaf(self, g: jnp.ndarray):
+        c: CompressionConfig = self.config
+        flat = g.astype(jnp.float32).reshape(-1)
+        if c.topk_frac > 0:
+            flat = _topk_mask(flat, c.topk_frac)
+        q, scale, n = _quantize_blockwise(flat, c.block, c.bits)
+        return {"q": q, "scale": scale, "n": n, "shape": g.shape}
+
+    def decompress_leaf(self, payload) -> jnp.ndarray:
+        x = _dequantize_blockwise(payload["q"], payload["scale"],
+                                  payload["n"])
+        return x.reshape(payload["shape"])
+
+    def apply(self, grads, state):
+        """Quantize->dequantize every gradient leaf with error feedback —
+        exactly what arrives after a compressed all-reduce.  Returns
+        (grads_hat, new_state, metrics)."""
+        c: CompressionConfig = self.config
+
+        def one(g, e):
+            gf = g.astype(jnp.float32)
+            if e is not None:
+                gf = gf + e
+            flat = gf.reshape(-1)
+            if c.topk_frac > 0:
+                flat = _topk_mask(flat, c.topk_frac)
+            q, scale, n = _quantize_blockwise(flat, c.block, c.bits)
+            ghat = _dequantize_blockwise(q, scale, n).reshape(g.shape)
+            new_e = (gf - ghat) if e is not None else None
+            return ghat.astype(g.dtype), new_e
+
+        if state is None:
+            outs = jax.tree.map(lambda g: one(g, None)[0], grads)
+            return outs, None, self.ratio_metrics(grads)
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(state)
+        pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        ghat = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+        new_state = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+        return ghat, new_state, self.ratio_metrics(grads)
+
+    def ratio_metrics(self, grads) -> Dict[str, float]:
+        c: CompressionConfig = self.config
+        raw = sum(g.size * 4 for g in jax.tree.leaves(grads))
+        comp = sum(g.size * c.bits // 8 + (g.size // c.block + 1) * 4
+                   for g in jax.tree.leaves(grads))
+        if c.topk_frac > 0:
+            comp = int(comp * c.topk_frac) + raw // 8  # indices bitmap
+        return {"bytes_raw": float(raw), "bytes_compressed": float(comp),
+                "compression_ratio": raw / max(comp, 1)}

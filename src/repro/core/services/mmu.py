@@ -1,0 +1,290 @@
+"""MMU service: shared virtual memory with configurable paging (paper §6.1).
+
+Coyote v2's MMU is "implemented in a hybrid manner: TLBs in on-chip SRAM,
+the rest in the host-side driver", with parametrizable page size / TLB size /
+associativity, GPU-style page-fault migration, and striping across HBM
+channels.  The TPU adaptation is a *paged KV-cache manager*:
+
+  * virtual address  = (sequence id, token position)
+  * physical address = (page id, offset)       [page id -> pool slot]
+  * page table       = per-sequence page list (host side, "driver")
+  * TLB              = set-associative SRAM cache of hot translations
+  * page fault       = pool page miss -> host callback allocates/migrates,
+                       raises IRQ_PAGE_FAULT on the interrupt bus
+  * striping         = pages round-robined over N channels (HBM banks)
+  * huge pages       = page_size is fully parametric (the 1 GB analogue is
+                       a whole-sequence page)
+
+The device-side consumer is the paged-attention Pallas kernel
+(``repro.kernels.paged_attention``), which walks ``block_table()`` output —
+the hardware TLB lookup of the paper, reshaped for the MXU.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.services.base import Service
+
+
+@dataclass(frozen=True)
+class MMUConfig:
+    page_size: int = 256                 # tokens per page (parametric)
+    n_pages: int = 4096                  # device pool size
+    tlb_entries: int = 256
+    tlb_assoc: int = 4
+    n_channels: int = 8                  # striping channels (HBM banks)
+    host_pool_pages: int = 16384         # host "swap" capacity
+
+
+@dataclass
+class PageTableEntry:
+    vpage: int
+    ppage: int                           # device pool slot, -1 if on host
+    on_host: bool = False
+    host_slot: int = -1
+
+
+@dataclass
+class SeqEntry:
+    seq_id: int
+    length: int = 0
+    pages: List[PageTableEntry] = field(default_factory=list)
+
+
+class TLB:
+    """Set-associative translation cache with LRU within each set."""
+
+    def __init__(self, entries: int, assoc: int):
+        assoc = max(1, min(assoc, entries))
+        self.n_sets = max(1, entries // assoc)
+        self.assoc = assoc
+        # each set: list of (key, ppage, last_used)
+        self._sets: List[List[Tuple[Tuple[int, int], int, int]]] = [
+            [] for _ in range(self.n_sets)]
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+
+    def _set_of(self, key: Tuple[int, int]) -> int:
+        return hash(key) % self.n_sets
+
+    def lookup(self, seq_id: int, vpage: int) -> Optional[int]:
+        key = (seq_id, vpage)
+        s = self._sets[self._set_of(key)]
+        self._tick += 1
+        for i, (k, p, _) in enumerate(s):
+            if k == key:
+                s[i] = (k, p, self._tick)
+                self.hits += 1
+                return p
+        self.misses += 1
+        return None
+
+    def insert(self, seq_id: int, vpage: int, ppage: int) -> None:
+        key = (seq_id, vpage)
+        s = self._sets[self._set_of(key)]
+        self._tick += 1
+        for i, (k, _, _) in enumerate(s):
+            if k == key:
+                s[i] = (key, ppage, self._tick)
+                return
+        if len(s) >= self.assoc:
+            s.remove(min(s, key=lambda e: e[2]))     # LRU evict
+        s.append((key, ppage, self._tick))
+
+    def invalidate(self, seq_id: Optional[int] = None) -> int:
+        n = 0
+        for s in self._sets:
+            keep = [e for e in s
+                    if seq_id is not None and e[0][0] != seq_id]
+            n += len(s) - len(keep)
+            s[:] = keep
+        return n
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 1.0
+
+
+class PageFaultError(Exception):
+    pass
+
+
+class MMU(Service):
+    """The paged-memory service.  Thread-safe; the 'driver' half."""
+
+    NAME = "mmu"
+
+    def __init__(self, config: MMUConfig = MMUConfig(),
+                 interrupt_post: Optional[Callable[[int, int], None]] = None):
+        super().__init__(config)
+        self._lock = threading.RLock()
+        self._post = interrupt_post or (lambda slot, val: None)
+        self._init_pools()
+
+    def _init_pools(self) -> None:
+        c: MMUConfig = self.config
+        self.tlb = TLB(c.tlb_entries, c.tlb_assoc)
+        self._free = list(range(c.n_pages - 1, -1, -1))
+        self._host_free = list(range(c.host_pool_pages - 1, -1, -1))
+        self._seqs: Dict[int, SeqEntry] = {}
+        self.page_faults = 0
+        self.migrations_out = 0
+        self.migrations_in = 0
+
+    # -- reconfiguration (paper scenario #1: swap 2 MB -> 1 GB pages) -------
+    def configure(self, config: MMUConfig) -> None:
+        with self._lock:
+            if self._seqs:
+                raise RuntimeError(
+                    "MMU reconfigure with live sequences; drain first "
+                    "(the shell checks app requirements before this)")
+            super().configure(config)
+            self._init_pools()
+
+    # -- allocation -----------------------------------------------------------
+    def alloc_seq(self, seq_id: int, n_tokens: int = 0, *, slot: int = 0) -> None:
+        with self._lock:
+            if seq_id in self._seqs:
+                raise KeyError(f"seq {seq_id} already allocated")
+            self._seqs[seq_id] = SeqEntry(seq_id=seq_id)
+        if n_tokens:
+            self.extend_seq(seq_id, n_tokens, slot=slot)
+
+    def extend_seq(self, seq_id: int, n_tokens: int, *, slot: int = 0) -> None:
+        """Grow a sequence; allocates pages on demand (the page-fault path
+        when the pool is exhausted triggers host eviction)."""
+        c: MMUConfig = self.config
+        with self._lock:
+            se = self._seqs[seq_id]
+            se.length += n_tokens
+            need = -(-se.length // c.page_size)          # ceil
+            while len(se.pages) < need:
+                ppage = self._take_device_page(seq_id, slot)
+                se.pages.append(PageTableEntry(
+                    vpage=len(se.pages), ppage=ppage))
+
+    def _take_device_page(self, seq_id: int, slot: int) -> int:
+        if not self._free:
+            self.page_faults += 1
+            self._post(slot, seq_id)                     # IRQ_PAGE_FAULT
+            victim = self._pick_victim(exclude=seq_id)
+            if victim is None:
+                raise PageFaultError("device page pool exhausted and no "
+                                     "victim sequence to evict")
+            self._evict_seq_page(victim)
+            if not self._free:
+                raise PageFaultError("eviction failed to free a page")
+        return self._free.pop()
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        # evict from the longest resident sequence (simple, deterministic)
+        best, best_len = None, -1
+        for sid, se in self._seqs.items():
+            if sid == exclude:
+                continue
+            resident = sum(1 for p in se.pages if not p.on_host)
+            if resident > best_len and resident > 0:
+                best, best_len = sid, resident
+        return best
+
+    def _evict_seq_page(self, seq_id: int) -> None:
+        se = self._seqs[seq_id]
+        for pte in reversed(se.pages):                   # evict tail first
+            if not pte.on_host:
+                if not self._host_free:
+                    raise PageFaultError("host pool exhausted")
+                pte.on_host = True
+                pte.host_slot = self._host_free.pop()
+                self._free.append(pte.ppage)
+                pte.ppage = -1
+                self.migrations_out += 1
+                self.tlb.invalidate(seq_id)
+                return
+
+    def free_seq(self, seq_id: int) -> None:
+        with self._lock:
+            se = self._seqs.pop(seq_id)
+            for pte in se.pages:
+                if pte.on_host:
+                    self._host_free.append(pte.host_slot)
+                else:
+                    self._free.append(pte.ppage)
+            n = self.tlb.invalidate(seq_id)
+            if n:
+                self._post(0, seq_id)                    # TLB invalidation
+
+    # -- translation -----------------------------------------------------------
+    def translate(self, seq_id: int, token_pos: int, *,
+                  slot: int = 0) -> Tuple[int, int]:
+        """(seq, pos) -> (physical page, offset).  TLB first, then the
+        driver walk; host-resident pages fault back in."""
+        c: MMUConfig = self.config
+        vpage, off = divmod(token_pos, c.page_size)
+        ppage = self.tlb.lookup(seq_id, vpage)
+        if ppage is not None:
+            return ppage, off
+        with self._lock:                                 # driver walk
+            se = self._seqs.get(seq_id)
+            if se is None or vpage >= len(se.pages):
+                raise PageFaultError(f"unmapped: seq {seq_id} page {vpage}")
+            pte = se.pages[vpage]
+            if pte.on_host:                              # migrate back in
+                self.page_faults += 1
+                self._post(slot, seq_id)
+                pte.ppage = self._take_device_page(seq_id, slot)
+                self._host_free.append(pte.host_slot)
+                pte.on_host = False
+                pte.host_slot = -1
+                self.migrations_in += 1
+            self.tlb.insert(seq_id, vpage, pte.ppage)
+            return pte.ppage, off
+
+    # -- device-side views ------------------------------------------------------
+    def block_table(self, seq_ids: List[int], max_pages: int) -> np.ndarray:
+        """(n_seqs, max_pages) int32 physical page ids, -1 padded — the
+        array the paged-attention kernel walks."""
+        out = np.full((len(seq_ids), max_pages), -1, np.int32)
+        with self._lock:
+            for i, sid in enumerate(seq_ids):
+                se = self._seqs.get(sid)
+                if se is None:
+                    continue
+                for pte in se.pages[:max_pages]:
+                    out[i, pte.vpage] = -1 if pte.on_host else pte.ppage
+        return out
+
+    def seq_lens(self, seq_ids: List[int]) -> np.ndarray:
+        with self._lock:
+            return np.array([self._seqs[s].length if s in self._seqs else 0
+                             for s in seq_ids], np.int32)
+
+    def channel_of(self, ppage: int) -> int:
+        """Striping: which channel (HBM bank) a page lives on."""
+        return ppage % self.config.n_channels
+
+    # -- introspection -----------------------------------------------------------
+    def utilization(self) -> Dict[str, Any]:
+        with self._lock:
+            c: MMUConfig = self.config
+            used = c.n_pages - len(self._free)
+            return {
+                "pages_used": used, "pages_total": c.n_pages,
+                "host_pages_used": c.host_pool_pages - len(self._host_free),
+                "sequences": len(self._seqs),
+                "tlb_hit_rate": self.tlb.hit_rate,
+                "page_faults": self.page_faults,
+                "migrations_out": self.migrations_out,
+                "migrations_in": self.migrations_in,
+            }
+
+    def status(self) -> Dict[str, Any]:
+        s = super().status()
+        s.update(self.utilization())
+        return s

@@ -1,0 +1,306 @@
+"""The shell: dynamic (services) layer + application layer (paper §3/§4).
+
+``Shell`` composes the three-layer design:
+
+  static layer   (never reconfigured)  — StaticLayer: host link, compile
+                                         cache, interrupts, reconfig ctrl
+  dynamic layer  (reconfigurable)      — ServiceRegistry: MMU, collectives,
+                                         compression, encryption, sniffer
+  app layer      (reconfigurable)      — VFpga slots behind the unified
+                                         interface, shared via cThreads
+
+Reconfiguration contract (paper §4): a *shell* reconfiguration swaps
+services and relinks apps (refusing configurations that strand a loaded
+app); an *app* reconfiguration touches one slot only.  Both are an order of
+magnitude cheaper than :meth:`cold_restart`, the full-reprogramming
+analogue (Table 3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import credits as C
+from repro.core.cthread import CThread
+from repro.core.interfaces import Oper
+from repro.core.services.base import Service, ServiceRegistry
+from repro.core.services.collectives import CollectiveConfig, CollectiveService
+from repro.core.services.compression import CompressionConfig, GradCompression
+from repro.core.services.encryption import AESConfig, AESService
+from repro.core.services.mmu import MMU, MMUConfig
+from repro.core.services.sniffer import SnifferConfig, TrafficSniffer
+from repro.core.static_layer import IRQ_PAGE_FAULT, StaticLayer
+from repro.core.vfpga import AppArtifact, VFpga
+
+SERVICE_TYPES = {
+    "mmu": (MMU, MMUConfig),
+    "collectives": (CollectiveService, CollectiveConfig),
+    "compression": (GradCompression, CompressionConfig),
+    "encryption": (AESService, AESConfig),
+    "sniffer": (TrafficSniffer, SnifferConfig),
+}
+
+
+@dataclass(frozen=True)
+class ShellConfig:
+    """Compile-time shell parametrization (paper §4: 'a shell is fully
+    parametrized by its services and the user applications')."""
+    services: Tuple[Tuple[str, Any], ...] = ()
+    n_vfpgas: int = 4
+    n_streams: int = 4
+    packet_bytes: int = 4096
+    stream_depth: int = 64
+    hbm_budget: int = 1 << 32
+    pcie_gbps: float = 12e9
+
+    @staticmethod
+    def make(services: Dict[str, Any] = None, **kw) -> "ShellConfig":
+        svc = tuple(sorted((services or {}).items(), key=lambda x: x[0]))
+        return ShellConfig(services=svc, **kw)
+
+
+@dataclass
+class BuildReport:
+    flow: str
+    components: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    total_s: float = 0.0
+    cache_hits: int = 0
+
+    def add(self, name: str, lower_s: float, compile_s: float,
+            hit: bool) -> None:
+        self.components[name] = {"lower_s": lower_s, "compile_s": compile_s,
+                                 "cached": float(hit)}
+        self.cache_hits += int(hit)
+
+
+class Shell:
+    def __init__(self, config: ShellConfig,
+                 static: Optional[StaticLayer] = None, mesh=None):
+        self.config = config
+        self.static = static or StaticLayer(mesh, pcie_gbps=config.pcie_gbps)
+        self.mesh = mesh
+        self.services = ServiceRegistry()
+        self.vfpgas: List[VFpga] = []
+        self.arbiter = C.RRArbiter(self.static.pcie,
+                                   packet_bytes=config.packet_bytes)
+        self._credits: Dict[Tuple[int, int], C.CreditAccount] = {}
+        self.built = False
+
+    # ==================================================== build ("synthesis")
+    def build(self, *, flow: str = "shell") -> BuildReport:
+        """Synthesize the shell.  ``flow='shell'`` builds services + slots;
+        ``flow='app'`` assumes service artifacts are already in the compile
+        cache (the nested build flow, Fig 7b) and only prepares slots."""
+        t0 = time.perf_counter()
+        report = BuildReport(flow=flow)
+        self._instantiate_services()
+        for name in self.services.names():
+            svc = self.services.get(name)
+            for aname, stats in self._build_service(svc).items():
+                report.add(f"{name}/{aname}", stats["lower_s"],
+                           stats["compile_s"], stats["cached"])
+        if not self.vfpgas:
+            for slot in range(self.config.n_vfpgas):
+                self.vfpgas.append(VFpga(
+                    slot, self.static, n_streams=self.config.n_streams,
+                    hbm_budget=self.config.hbm_budget))
+                self.vfpgas[-1].shell = self
+        report.total_s = time.perf_counter() - t0
+        self.built = True
+        return report
+
+    def _instantiate_services(self) -> None:
+        for name, svc_cfg in self.config.services:
+            cls, _cfg_cls = SERVICE_TYPES[name]
+            if name in self.services:
+                existing = self.services.get(name)
+                if existing.config != svc_cfg:
+                    existing.configure(svc_cfg)
+                continue
+            if name == "mmu":
+                svc = cls(svc_cfg, interrupt_post=lambda slot, v:
+                          self.static.interrupts.post(slot, IRQ_PAGE_FAULT, v))
+            else:
+                svc = cls(svc_cfg)
+            if name == "sniffer":
+                svc.attach(self.static.pcie)
+            self.services.add(svc)
+        # drop services not in the new config
+        wanted = {n for n, _ in self.config.services}
+        for name in list(self.services.names()):
+            if name not in wanted:
+                self.services.remove(name)
+
+    def _build_service(self, svc: Service) -> Dict[str, Dict[str, float]]:
+        """Compile a service's device artifacts through the compile cache."""
+        out: Dict[str, Dict[str, float]] = {}
+        for aname, fn, args in self._service_kernels(svc):
+            key = self.static.compile_cache.make_key(
+                f"svc:{svc.NAME}:{aname}", svc.config, self.mesh,
+                args)
+
+            def build(fn=fn, args=args):
+                b0 = time.perf_counter()
+                lowered = jax.jit(fn).lower(*args)
+                b1 = time.perf_counter()
+                compiled = lowered.compile()
+                b2 = time.perf_counter()
+                return compiled, b1 - b0, b2 - b1
+
+            entry, hit = self.static.compile_cache.get_or_build(key, build)
+            out[aname] = {"lower_s": entry.lower_s,
+                          "compile_s": entry.compile_s, "cached": hit}
+            setattr(svc, f"kernel_{aname}", entry.compiled)
+        return out
+
+    def _service_kernels(self, svc: Service):
+        """Device kernels each service contributes to the shell bitstream."""
+        if svc.NAME == "mmu":
+            c: MMUConfig = svc.config
+            pool = jax.ShapeDtypeStruct((c.n_pages, c.page_size, 8, 64),
+                                        jnp.bfloat16)
+            table = jax.ShapeDtypeStruct((8, 16), jnp.int32)
+
+            def gather_pages(pool, table):
+                safe = jnp.maximum(table, 0)
+                return jnp.take(pool, safe.reshape(-1), axis=0)
+            yield "gather_pages", gather_pages, (pool, table)
+        elif svc.NAME == "encryption":
+            from repro.core.services import encryption as E
+            blocks = jax.ShapeDtypeStruct((4096, 16), jnp.uint8)
+            keys = jax.ShapeDtypeStruct((11, 16), jnp.uint8)
+            yield "aes_ecb", E.encrypt_block, (blocks, keys)
+            iv = jax.ShapeDtypeStruct((64, 16), jnp.uint8)
+            mb = jax.ShapeDtypeStruct((64, 256, 16), jnp.uint8)
+            yield "aes_cbc_ms", E.aes_cbc_multistream, (mb, iv, keys)
+        elif svc.NAME == "compression":
+            from repro.core.services.compression import _quantize_blockwise
+            g = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+            yield "quantize", lambda x: _quantize_blockwise(
+                x, svc.config.block, svc.config.bits)[:2], (g,)
+        elif svc.NAME == "collectives":
+            x = jax.ShapeDtypeStruct((1 << 16,), jnp.float32)
+            yield "allreduce_probe", lambda x: x * 2.0, (x,)
+
+    # ================================================= reconfiguration =====
+    def reconfigure_shell(self, new_config: ShellConfig, *,
+                          bitstream_path: Optional[str] = None
+                          ) -> Dict[str, float]:
+        """Swap the dynamic layer (Table 3).  Loaded apps are re-linked
+        against the new services first; a violation aborts the swap."""
+        t_total0 = time.perf_counter()
+        if bitstream_path is not None:
+            # stream the shell bitstream through the utility channel
+            _, kernel_io_s, _, _ = self.static.reconfig.load_bitstream(
+                bitstream_path, slot=0)
+        t_k0 = time.perf_counter()
+        # fail-safe: dry-check every loaded app against the new services
+        trial = Shell(new_config, static=self.static, mesh=self.mesh)
+        trial._instantiate_services = Shell._instantiate_services.__get__(trial)
+        probe = ServiceRegistry()
+        for name, svc_cfg in new_config.services:
+            cls, _ = SERVICE_TYPES[name]
+            probe.add(cls(svc_cfg))
+        for vf in self.vfpgas:
+            if vf.app is not None:
+                for req in vf.app.requires:
+                    if not probe.check(req):
+                        raise RuntimeError(
+                            f"shell reconfiguration would strand app "
+                            f"{vf.app.name!r} in slot {vf.slot} "
+                            f"(missing {req.service}:{req.constraints})")
+        self.config = new_config
+        self.build(flow="shell")
+        # relink loaded apps against the new shell
+        for vf in self.vfpgas:
+            if vf.app is not None:
+                art = vf.app
+                vf.load(art, self.services, self.mesh)
+        t1 = time.perf_counter()
+        return {"kernel_s": t1 - t_k0, "total_s": t1 - t_total0}
+
+    def reconfigure_app(self, slot: int, artifact: AppArtifact
+                        ) -> Dict[str, float]:
+        """App-only partial reconfiguration: one slot, services untouched."""
+        t0 = time.perf_counter()
+        stats = self.vfpgas[slot].load(artifact, self.services, self.mesh)
+        stats["kernel_s"] = stats["total_s"]
+        stats["total_s"] = time.perf_counter() - t0
+        return stats
+
+    def cold_restart(self) -> Dict[str, float]:
+        """Full re-programming analogue (Vivado flow + hot-plug): drop
+        every executable and service, clear all caches, rebuild, reload."""
+        t0 = time.perf_counter()
+        apps = [(vf.slot, vf.app) for vf in self.vfpgas if vf.app]
+        for vf in self.vfpgas:
+            vf.unload()
+        for name in list(self.services.names()):
+            self.services.remove(name)
+        self.static.compile_cache.clear()
+        jax.clear_caches()
+        self.vfpgas.clear()
+        self.build(flow="shell")
+        for slot, art in apps:
+            self.vfpgas[slot].load(art, self.services, self.mesh)
+        return {"total_s": time.perf_counter() - t0}
+
+    # ================================================= app/thread access ====
+    def load_app(self, slot: int, artifact: AppArtifact) -> Dict[str, float]:
+        if not self.built:
+            self.build()
+        return self.vfpgas[slot].load(artifact, self.services, self.mesh)
+
+    def attach_thread(self, slot: int, pid: int) -> CThread:
+        t = CThread(self.vfpgas[slot], pid)
+        return t
+
+    # ================================================= datapath =============
+    def _credit(self, slot: int, stream: int) -> C.CreditAccount:
+        key = (slot, stream)
+        if key not in self._credits:
+            self._credits[key] = C.CreditAccount(self.config.stream_depth)
+        return self._credits[key]
+
+    def kick(self, slot: int) -> None:
+        """Drain the slot's send queues through credits + the RR arbiter."""
+        vf = self.vfpgas[slot]
+        for sq, cq in ((vf.iface.sq_read, vf.iface.cq_read),
+                       (vf.iface.sq_write, vf.iface.cq_write)):
+            while True:
+                item = sq.pop(timeout=0)
+                if item is None:
+                    break
+                ticket, sg = item
+                acct = self._credit(slot, sg.src_stream)
+                npkts = max(len(C.packetize(
+                    max(sg.length, 1), self.config.packet_bytes)), 1)
+                acct.acquire(min(npkts, acct.capacity))
+
+                def done(t, ticket=ticket, sg=sg, cq=cq, acct=acct,
+                         npkts=npkts, vf=vf):
+                    comp = vf.execute_sg(ticket, sg)
+                    cq.complete(comp)
+                    acct.release(min(npkts, acct.capacity))
+
+                self.arbiter.submit(f"vfpga{slot}.s{sg.src_stream}",
+                                    max(sg.length, 1),
+                                    tag=sg.opcode.value, on_done=done)
+        self.arbiter.drain()
+
+    def drain(self) -> None:
+        self.arbiter.drain()
+
+    def status(self) -> Dict[str, Any]:
+        return {
+            "services": self.services.status(),
+            "slots": [vf.status() for vf in self.vfpgas],
+            "compile_cache": self.static.compile_cache.stats(),
+            "link_bytes": self.static.pcie.bytes_moved,
+            "fairness": self.arbiter.fairness(),
+        }

@@ -1,0 +1,291 @@
+"""Static layer: the never-reconfigured substrate (paper §5).
+
+Owns exactly what Coyote v2's static layer owns — the host link, the
+reconfiguration controller, and the interrupt plumbing — and nothing else:
+
+  * :class:`TransferEngine` — the XDMA analogue.  Chunked, double-buffered
+    host->device upload with device-side offset writes (DMA-at-offset), a
+    deliberately word-granular "HWICAP" path for the Table 2 comparison,
+    and writeback completion counters.
+  * :class:`CompileCache` — the routed-and-locked-checkpoint analogue: XLA
+    executables keyed by (name, config, mesh, avals), reused across shell
+    reconfigurations (nested build flow, Fig 7b).
+  * :class:`InterruptBus` — MSI-X analogue: page faults, reconfiguration
+    completions, TLB invalidations and user IRQs all land here.
+  * :class:`ReconfigController` — streams "partial bitstreams" (serialized
+    artifacts) from disk through the utility channel at full bandwidth.
+
+The static layer routes; it never interprets payloads (paper §3).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.credits import Link
+from repro.core.interfaces import Completion, CompletionQueue, InterruptQueue, Oper
+
+# Interrupt source ids (paper §5.1 lists these four)
+IRQ_PAGE_FAULT = 1
+IRQ_RECONFIG_DONE = 2
+IRQ_TLB_INVALIDATION = 3
+IRQ_USER = 4
+
+
+# ============================================================ transfers ====
+@dataclass
+class TransferStats:
+    nbytes: int = 0
+    seconds: float = 0.0
+    chunks: int = 0
+
+    @property
+    def mbps(self) -> float:
+        return self.nbytes / max(self.seconds, 1e-12) / 1e6
+
+
+class TransferEngine:
+    """Host<->device data movement (XDMA core analogue).
+
+    Three paths, mirroring Table 2's controller comparison:
+      * ``upload_word_granular``  — HWICAP analogue: tiny synchronous writes,
+        one blocking round-trip per word-burst.
+      * ``upload``                — Coyote path: large chunks streamed
+        through JAX's async dispatch, device-side offset writes, a single
+        sync at the end (double-buffered by the dispatch queue).
+      * ``upload_whole``          — single device_put (upper bound).
+    """
+
+    def __init__(self, device=None):
+        self.device = device or jax.devices()[0]
+        self._write_at = jax.jit(
+            lambda dst, chunk, off: jax.lax.dynamic_update_slice(
+                dst, chunk, (off,)), donate_argnums=(0,))
+
+    # -- HWICAP analogue: word-granular, fully synchronous ------------------
+    def upload_word_granular(self, data: np.ndarray, *,
+                             word_bytes: int = 4096) -> Tuple[jax.Array, TransferStats]:
+        flat = data.reshape(-1).view(np.uint8)
+        n = flat.size
+        words = max(word_bytes // flat.itemsize, 1)
+        t0 = time.perf_counter()
+        dst = jnp.zeros((n,), jnp.uint8)
+        off = 0
+        chunks = 0
+        while off < n:
+            chunk = jnp.asarray(flat[off:off + words])
+            dst = self._write_at(dst, chunk, off)
+            dst.block_until_ready()          # sync per word-burst
+            off += words
+            chunks += 1
+        dt = time.perf_counter() - t0
+        out = jax.device_put(dst).block_until_ready()
+        return out, TransferStats(nbytes=n, seconds=dt, chunks=chunks)
+
+    # -- Coyote ICAP path: streamed chunks, one sync -------------------------
+    def upload(self, data: np.ndarray, *,
+               chunk_bytes: int = 16 << 20) -> Tuple[jax.Array, TransferStats]:
+        flat = np.ascontiguousarray(data).reshape(-1).view(np.uint8)
+        n = flat.size
+        t0 = time.perf_counter()
+        dst = jnp.zeros((n,), jnp.uint8)
+        off = 0
+        chunks = 0
+        while off < n:
+            end = min(off + chunk_bytes, n)
+            chunk = jnp.asarray(flat[off:end])   # async H2D of this chunk
+            dst = self._write_at(dst, chunk, off)  # overlaps with next stage
+            off = end
+            chunks += 1
+        dst.block_until_ready()                  # single completion sync
+        dt = time.perf_counter() - t0
+        return dst, TransferStats(nbytes=n, seconds=dt, chunks=chunks)
+
+    def upload_whole(self, data: np.ndarray) -> Tuple[jax.Array, TransferStats]:
+        t0 = time.perf_counter()
+        out = jax.device_put(data)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        return out, TransferStats(nbytes=data.nbytes, seconds=dt, chunks=1)
+
+    def download(self, arr: jax.Array) -> Tuple[np.ndarray, TransferStats]:
+        t0 = time.perf_counter()
+        out = np.asarray(jax.device_get(arr))
+        dt = time.perf_counter() - t0
+        return out, TransferStats(nbytes=out.nbytes, seconds=dt, chunks=1)
+
+    # -- pytree migration (the migration channel, §5.1) ----------------------
+    def migrate_tree(self, tree, shardings=None, *,
+                     donate_stale: bool = True) -> Tuple[Any, TransferStats]:
+        """Move a host pytree to device (weights-before-serving migration)."""
+        t0 = time.perf_counter()
+        if shardings is not None:
+            out = jax.device_put(tree, shardings)
+        else:
+            out = jax.device_put(tree)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(tree))
+        return out, TransferStats(nbytes=nbytes, seconds=dt,
+                                  chunks=len(jax.tree.leaves(tree)))
+
+
+# ========================================================== compile cache ==
+@dataclass
+class CacheEntry:
+    compiled: Any
+    lower_s: float
+    compile_s: float
+    hits: int = 0
+    key: str = ""
+
+
+class CompileCache:
+    """Executable cache keyed by (name, config-hash, mesh, avals) — the
+    'routed & locked checkpoint' a new app links against (paper §4)."""
+
+    def __init__(self):
+        self._entries: Dict[str, CacheEntry] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def make_key(name: str, config_repr: Any, mesh=None,
+                 avals: Any = None) -> str:
+        h = hashlib.sha256()
+        h.update(name.encode())
+        h.update(repr(config_repr).encode())
+        if mesh is not None:
+            h.update(repr((tuple(mesh.shape.items()),
+                           mesh.axis_names)).encode())
+        if avals is not None:
+            h.update(repr(jax.tree.map(
+                lambda a: (tuple(a.shape), str(a.dtype)), avals)).encode())
+        return h.hexdigest()[:24]
+
+    def get(self, key: str) -> Optional[CacheEntry]:
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None:
+                e.hits += 1
+            return e
+
+    def get_or_build(self, key: str,
+                     build: Callable[[], Tuple[Any, float, float]]
+                     ) -> Tuple[CacheEntry, bool]:
+        """build() -> (compiled, lower_s, compile_s).  Returns (entry, hit)."""
+        e = self.get(key)
+        if e is not None:
+            return e, True
+        compiled, lower_s, compile_s = build()
+        e = CacheEntry(compiled=compiled, lower_s=lower_s,
+                       compile_s=compile_s, key=key)
+        with self._lock:
+            self._entries[key] = e
+        return e, False
+
+    def invalidate(self, key: str) -> None:
+        with self._lock:
+            self._entries.pop(key, None)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "hits": sum(e.hits for e in self._entries.values()),
+                    "compile_s_saved": sum(
+                        e.hits * (e.lower_s + e.compile_s)
+                        for e in self._entries.values())}
+
+
+# =========================================================== interrupts ====
+class InterruptBus:
+    """Central MSI-X analogue.  Sources post (slot, irq_type, value); the
+    per-vFPGA InterruptQueue fan-out happens here."""
+
+    def __init__(self):
+        self._queues: Dict[int, InterruptQueue] = {}
+        self.log: List[Tuple[float, int, int, int]] = []
+        self._lock = threading.Lock()
+
+    def register(self, slot: int, q: InterruptQueue) -> None:
+        with self._lock:
+            self._queues[slot] = q
+
+    def post(self, slot: int, irq_type: int, value: int = 0) -> None:
+        with self._lock:
+            self.log.append((time.perf_counter(), slot, irq_type, value))
+            q = self._queues.get(slot)
+        if q is not None:
+            q.raise_irq((irq_type << 32) | (value & 0xFFFFFFFF))
+
+
+# ====================================================== reconfig control ===
+class ReconfigController:
+    """ICAP analogue (paper §5.3, Table 2): streams partial "bitstreams"
+    (serialized artifact blobs) from disk into device memory.
+
+    Kernel latency  = deserialize + device upload (the actual reconfig).
+    Total latency   = disk read + copy-to-"kernel"-buffer + kernel latency.
+    """
+
+    def __init__(self, engine: TransferEngine, bus: InterruptBus):
+        self.engine = engine
+        self.bus = bus
+
+    @staticmethod
+    def write_bitstream(path: str, payload: Any) -> int:
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        with open(path, "wb") as f:
+            f.write(blob)
+        return len(blob)
+
+    def load_bitstream(self, path: str, *, slot: int = 0,
+                       chunk_bytes: int = 16 << 20):
+        """Returns (payload, kernel_s, total_s, nbytes)."""
+        t_total0 = time.perf_counter()
+        with open(path, "rb") as f:
+            blob = f.read()                       # disk -> user space
+        staged = bytearray(blob)                  # user -> kernel copy
+        t_k0 = time.perf_counter()
+        payload = pickle.loads(bytes(staged))
+        dev = None
+        if isinstance(payload, dict) and "arrays" in payload:
+            dev, _ = self.engine.migrate_tree(payload["arrays"])
+            payload = dict(payload, arrays=dev)
+        t1 = time.perf_counter()
+        self.bus.post(slot, IRQ_RECONFIG_DONE, value=len(blob) & 0xFFFFFFFF)
+        return payload, (t1 - t_k0), (t1 - t_total0), len(blob)
+
+
+# ============================================================ the layer ====
+class StaticLayer:
+    """Host link + reconfig + interrupts; routes everything else upward."""
+
+    def __init__(self, mesh=None, *, pcie_gbps: float = 12e9):
+        self.mesh = mesh
+        self.engine = TransferEngine()
+        self.compile_cache = CompileCache()
+        self.interrupts = InterruptBus()
+        self.reconfig = ReconfigController(self.engine, self.interrupts)
+        # modeled links for the fairness/packetization layer
+        self.pcie = Link("pcie", pcie_gbps)
+        self.writebacks = CompletionQueue()
+
+    def route_completion(self, ticket: int, tid: int, op: Oper, nbytes: int,
+                         t_submit: float, result: Any = None) -> None:
+        self.writebacks.complete(Completion(
+            ticket=ticket, tid=tid, opcode=op, nbytes=nbytes,
+            t_submit=t_submit, t_done=time.perf_counter(), result=result))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticCorpus
+__all__ = ["DataConfig", "Prefetcher", "SyntheticCorpus"]

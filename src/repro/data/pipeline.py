@@ -1,0 +1,111 @@
+"""Data pipeline: deterministic synthetic corpus + prefetching loader.
+
+Production-shaped: document sampling -> packing into fixed-length rows ->
+sharded host batches -> background prefetch thread overlapping host->device
+transfer with compute, plus straggler simulation/mitigation hooks used by
+the trainer (skip-batch dispatch when a host is slow).
+
+Determinism contract: batch(step) is a pure function of (seed, step) — a
+restart resumes bit-identically, which the checkpoint tests rely on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    seed: int = 0
+    mean_doc_len: int = 512        # documents are packed into rows
+    bos_id: int = 1
+    eos_id: int = 2
+    with_frames: bool = False      # audio stub (whisper): emit frames too
+    frame_len: int = 0
+    d_model: int = 0
+
+
+class SyntheticCorpus:
+    """Zipf-ish random documents, packed: batch(step) is pure in (seed, step)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.RandomState((c.seed * 1_000_003 + step) % (2**31))
+        rows = np.empty((c.global_batch, c.seq_len), np.int32)
+        for i in range(c.global_batch):
+            toks = []
+            while len(toks) < c.seq_len:
+                dlen = max(int(rng.exponential(c.mean_doc_len)), 8)
+                doc = rng.zipf(1.3, size=dlen) % (c.vocab_size - 3) + 3
+                toks.extend([c.bos_id, *doc.tolist(), c.eos_id])
+            rows[i] = np.asarray(toks[:c.seq_len], np.int32)
+        out = {"tokens": rows}
+        if c.with_frames:
+            out["frames"] = rng.randn(
+                c.global_batch, c.frame_len, c.d_model).astype(np.float32)
+        return out
+
+
+class Prefetcher:
+    """Background thread staging batch(step+1..step+depth) onto device.
+
+    ``straggler_sim`` optionally injects host delays; ``get`` takes a
+    timeout so the trainer can *skip* a straggling batch (the data-dispatch
+    mitigation: training proceeds with the next ready batch, the skipped
+    step id is logged for exactly-once accounting)."""
+
+    def __init__(self, corpus: SyntheticCorpus, *, depth: int = 2,
+                 device_put: Optional[Callable[[Any], Any]] = None,
+                 straggler_sim: Optional[Callable[[int], float]] = None,
+                 start_step: int = 0):
+        self.corpus = corpus
+        self.depth = depth
+        self.device_put = device_put or jax.device_put
+        self.straggler_sim = straggler_sim
+        self._q: "queue.Queue[tuple[int, Any]]" = queue.Queue(maxsize=depth)
+        self._next = start_step
+        self._stop = threading.Event()
+        self.skipped: list[int] = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            step = self._next
+            self._next += 1
+            if self.straggler_sim is not None:
+                delay = self.straggler_sim(step)
+                if delay > 0:
+                    time.sleep(delay)
+            host = self.corpus.batch(step)
+            dev = self.device_put(host)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, dev), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def get(self, timeout: Optional[float] = None):
+        """Next ready (step, batch); None on timeout (caller may skip)."""
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; TPU is the deployment target.
+"""

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  sm_scale: Optional[float] = None):
+    """q (B, H, Sq, D); k, v (B, K, Sk, D) -> (B, H, Sq, D).  Exact softmax
+    attention with GQA + optional causal/sliding-window masking."""
+    b, h, sq, d = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    group = h // kh
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, kh, group, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * sm_scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, *,
+                 use_pallas: bool = False, interpret: bool = True):
+    """q (B, H, D); pages (P, page, K, D); tables (B, maxp); lens (B,)."""
+    if use_pallas:
+        return paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                               interpret=interpret)
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens)

@@ -1,0 +1,140 @@
+"""Pallas TPU paged-attention decode kernel — the MMU service's datapath.
+
+This is the paper-technique kernel: decode attention that reads KV through
+the MMU's page tables (the "TLB lookup" in hardware).  TPU adaptation:
+
+  * KV lives in a paged pool ``(n_pages, page_size, kv_heads, head_dim)``
+    (HBM); sequences own scattered page lists;
+  * the grid is (batch, kv_heads, max_pages); the page axis is sequential,
+    carrying the online-softmax state (m/l/acc) in VMEM scratch;
+  * the block table arrives via ``PrefetchScalarGridSpec`` — it is consumed
+    by the *index_map*, so the page fetch address is computed from SMEM
+    before the DMA issues: that is precisely a hardware TLB walk,
+    reshaped for the MXU;
+  * GQA: all ``group = H // KV`` query heads of one kv head are processed
+    together as the (group, head_dim) q tile — KV is fetched once per page
+    regardless of group size;
+  * out-of-range pages (beyond seq_len) are masked, and invalid table
+    entries (-1, e.g. host-swapped pages) index page 0 but stay masked.
+
+Oracle: ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(tables_ref, lens_ref,           # scalar prefetch (SMEM)
+               q_ref, k_ref, v_ref, o_ref,
+               m_scratch, l_scratch, acc_scratch, *,
+               page_size: int, sm_scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+    np_ = pl.num_programs(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    seq_len = lens_ref[b]
+    valid_page = (pi * page_size < seq_len) & (tables_ref[b, pi] >= 0)
+
+    @pl.when(valid_page)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (group, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (page, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (group, page)
+        pos = pi * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+
+        m_prev = m_scratch[...]                          # (group, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scratch[...] = alpha * l_scratch[...] + jnp.sum(
+            p, axis=1, keepdims=True)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (page, d)
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+
+    @pl.when(pi == np_ - 1)
+    def _done():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                    sm_scale: Optional[float] = None,
+                    interpret: bool = False):
+    """Decode attention through page tables.
+
+    q            (B, H, D)         — one new token per sequence
+    k/v_pages    (P, page, K, D)   — the MMU's device page pool
+    block_tables (B, max_pages)    int32 physical page ids (-1 = unmapped)
+    seq_lens     (B,)              int32 valid tokens per sequence
+    -> (B, H, D)
+    """
+    b, h, d = q.shape
+    n_pages, page_size, kh, _ = k_pages.shape
+    group = h // kh
+    max_pages = block_tables.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+
+    # (B, K, group, D) query tile per (batch, kv head)
+    qg = q.reshape(b, kh, group, d)
+
+    kernel = functools.partial(_pa_kernel, page_size=page_size,
+                               sm_scale=sm_scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d),
+                         lambda bi, ki, pi, tables, lens: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, ki, pi, tables, lens:
+                         (jnp.maximum(tables[bi, pi], 0), 0, ki, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, ki, pi, tables, lens:
+                         (jnp.maximum(tables[bi, pi], 0), 0, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d),
+                               lambda bi, ki, pi, tables, lens:
+                               (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, qg, k_pages, v_pages)
+    return out.reshape(b, h, d)

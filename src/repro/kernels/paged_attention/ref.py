@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for paged attention: gather pages, dense softmax."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
+                        sm_scale: Optional[float] = None):
+    """Same contract as the kernel; gathers the paged KV into dense
+    (B, max_len, K, D) buffers and runs exact masked attention."""
+    b, h, d = q.shape
+    n_pages, page_size, kh, _ = k_pages.shape
+    group = h // kh
+    max_pages = block_tables.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+
+    safe = jnp.maximum(block_tables, 0)                 # (B, maxp)
+    k = jnp.take(k_pages, safe.reshape(-1), axis=0)     # (B*maxp, page, K, D)
+    v = jnp.take(v_pages, safe.reshape(-1), axis=0)
+    k = k.reshape(b, max_pages * page_size, kh, d)
+    v = v.reshape(b, max_pages * page_size, kh, d)
+
+    qf = q.reshape(b, kh, group, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(max_pages * page_size)[None]
+    page_ok = jnp.repeat(block_tables >= 0, page_size, axis=1)
+    mask = (pos < seq_lens[:, None]) & page_ok
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

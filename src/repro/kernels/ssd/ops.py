@@ -1,0 +1,20 @@
+"""Jitted public wrapper for the SSD scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ref import ssd_chunked, ssd_sequential
+from repro.kernels.ssd.ssd import ssd_chunked_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def ssd(x, dt, A, Bm, C, *, chunk: int = 256, use_pallas: bool = False,
+        interpret: bool = True):
+    """Dispatch: Pallas kernel (TPU target) or chunked-jnp reference."""
+    if use_pallas:
+        return ssd_chunked_pallas(x, dt, A, Bm, C, chunk=chunk,
+                                  interpret=interpret)
+    return ssd_chunked(x, dt, A, Bm, C, chunk=chunk)

@@ -1,0 +1,39 @@
+"""Oracles for the SSD kernel.
+
+Two references: the chunked pure-jnp implementation the model uses
+(``repro.models.ssm.ssd_chunked``) and a fully sequential O(S) recurrence
+(``ssd_sequential``) that is trivially correct — the chunked path and the
+Pallas kernel must both match it."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # re-export: the model-path oracle
+
+__all__ = ["ssd_chunked", "ssd_sequential"]
+
+
+def ssd_sequential(x, dt, A, Bm, C):
+    """Token-by-token recurrence.  x (B,S,H,P); dt (B,S,H); A (H,);
+    Bm/C (B,S,G,N).  Returns (y, final_state (B,H,P,N))."""
+    b, s_len, h, pd = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P) (B,H) (B,G,N)*2
+        bh = jnp.repeat(bt, rep, axis=1).astype(jnp.float32)
+        ch = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
+        da = jnp.exp(dtt * A[None, :])              # (B,H)
+        upd = (dtt[..., None, None] * bh[:, :, None, :]
+               * xt.astype(jnp.float32)[..., None])
+        state = da[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ch)
+        return state, y
+
+    init = jnp.zeros((b, h, pd, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

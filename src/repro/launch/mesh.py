@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device,
+while the dry-run initialises 512 placeholder devices before calling in.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips; two pods add a leading
+    `pod` axis (512 chips).  DP/FSDP runs on (pod, data); TP/EP/SP on model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever local devices exist (tests, examples)."""
+    n = data * model
+    devs = jax.devices()[:n]
+    assert len(devs) == n, f"need {n} devices, have {len(jax.devices())}"
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto),
+                         devices=devs)
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

@@ -1,0 +1,257 @@
+"""Step builders shared by the dry-run, the trainer, and the server.
+
+Each builder returns a :class:`StepBundle`: the step function plus abstract
+inputs (ShapeDtypeStructs — no allocation) and sharding trees, ready for
+``jax.jit(fn, in_shardings=…).lower(*abstract).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.sharding import MeshRules
+from repro.optim import adamw
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    static_broadcast: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.abstract_args)
+
+
+def _ns(mesh: Mesh, tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract_params(cfg: ModelConfig, dtype):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def _batch_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.n_encoder_layers:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules):
+    bax = rules.batch(shape.global_batch)
+    specs = {"tokens": P(bax, None)}
+    if cfg.n_encoder_layers:
+        specs["frames"] = P(bax, None, None)
+    return specs
+
+
+# ================================================================= train ===
+def make_train_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                      remat: str = "dots",
+                      compute_dtype=jnp.bfloat16,
+                      opt_cfg: Optional[adamw.AdamWConfig] = None,
+                      param_dtype=jnp.float32,
+                      microbatches: int = 1,
+                      compression=None,
+                      attention_impl: str = "ref",
+                      param_scheme: str = "2d",
+                      cast_params_bf16: bool = False) -> StepBundle:
+    """``microbatches`` > 1 accumulates gradients over sequential
+    micro-steps (memory lever); ``compression`` is an optional
+    GradCompression service whose error-feedback state rides in
+    opt_state["ef"] (inter-pod bandwidth lever)."""
+    rules = MeshRules.from_mesh(mesh, scheme=param_scheme)
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    assert shape.global_batch % microbatches == 0
+
+    fused = attention_impl == "fused"
+
+    def loss_grads(p, b):
+        def lf(p):
+            if cast_params_bf16:
+                # cast BEFORE the FSDP gathers so they move bf16, not f32
+                # (grads flow through the cast and accumulate fp32)
+                p_use = jax.tree.map(
+                    lambda w: w.astype(jnp.bfloat16)
+                    if w.dtype == jnp.float32 and w.ndim >= 2 else w, p)
+            else:
+                p_use = p
+            return T.loss_fn(p_use, cfg, b, remat=remat, rules=rules,
+                             compute_dtype=compute_dtype,
+                             fused_attention=fused)
+        return jax.value_and_grad(lf, has_aux=True)(p)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (_, metrics), grads = loss_grads(params, batch)
+        else:
+            resh = jax.tree.map(
+                lambda x: x.reshape(
+                    (microbatches, x.shape[0] // microbatches)
+                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                gacc, macc = carry
+                (_, m), g = loss_grads(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                macc = jax.tree.map(jnp.add, macc, m)
+                return (gacc, macc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"loss": jnp.float32(0), "aux_loss": jnp.float32(0),
+                  "tokens": jnp.float32(0)}
+            (gsum, msum), _ = jax.lax.scan(body, (g0, m0), resh)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            metrics = {"loss": msum["loss"] / microbatches,
+                       "aux_loss": msum["aux_loss"] / microbatches,
+                       "tokens": msum["tokens"]}
+        opt_state = dict(opt_state)
+        if compression is not None:
+            ef = opt_state.pop("ef", None)
+            grads, new_ef, _ = compression.apply(grads, ef)
+        new_params, new_opt, om = adamw.update(grads, opt_state, params,
+                                               opt_cfg)
+        if compression is not None and new_ef is not None:
+            new_opt["ef"] = new_ef
+        metrics = dict(metrics)
+        metrics.update(om)
+        return new_params, new_opt, metrics
+
+    params_abs = _abstract_params(cfg, param_dtype)
+    opt_abs = jax.eval_shape(adamw.init, params_abs)
+    if compression is not None and compression.config.error_feedback:
+        opt_abs = dict(opt_abs)
+        opt_abs["ef"] = jax.eval_shape(compression.init_state, params_abs)
+    batch_abs = _batch_abstract(cfg, shape)
+
+    pspec = T.param_specs(cfg, rules)
+    ospec = adamw.state_specs(pspec)
+    if compression is not None and compression.config.error_feedback:
+        ospec = dict(ospec)
+        ospec["ef"] = pspec
+    bspec = _batch_specs(cfg, shape, rules)
+
+    return StepBundle(
+        name=f"train[{cfg.arch_id}/{shape.name}]",
+        fn=train_step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(_ns(mesh, pspec), _ns(mesh, ospec), _ns(mesh, bspec)),
+        out_shardings=(_ns(mesh, pspec), _ns(mesh, ospec),
+                       NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+
+
+# =============================================================== prefill ===
+def make_prefill_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                        param_dtype=jnp.bfloat16,
+                        cache_dtype=jnp.bfloat16,
+                        attention_impl: str = "ref",
+                        serving_params: bool = False) -> StepBundle:
+    rules = MeshRules.from_mesh(mesh)
+    if serving_params:
+        rules = rules.serving()
+    max_len = shape.seq_len
+    fused = attention_impl == "fused"
+
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch["tokens"], max_len,
+                         encoder_frames=batch.get("frames"), rules=rules,
+                         cache_dtype=cache_dtype, fused_attention=fused)
+
+    params_abs = _abstract_params(cfg, param_dtype)
+    batch_abs = _batch_abstract(cfg, shape)
+    pspec = T.param_specs(cfg, rules)
+    bspec = _batch_specs(cfg, shape, rules)
+    cspec = T.cache_specs(cfg, rules, shape.global_batch, max_len)
+    logits_spec = P(rules.batch(shape.global_batch),
+                    rules.tp(cfg.padded_vocab))
+
+    return StepBundle(
+        name=f"prefill[{cfg.arch_id}/{shape.name}]",
+        fn=prefill_step,
+        abstract_args=(params_abs, batch_abs),
+        in_shardings=(_ns(mesh, pspec), _ns(mesh, bspec)),
+        out_shardings=(NamedSharding(mesh, logits_spec), _ns(mesh, cspec)),
+        donate_argnums=(),
+    )
+
+
+# ================================================================ decode ===
+def make_decode_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                       param_dtype=jnp.bfloat16,
+                       cache_dtype=jnp.bfloat16,
+                       attention_impl: str = "ref",
+                       uniform_pos: bool = False,
+                       context_parallel: bool = False,
+                       serving_params: bool = False) -> StepBundle:
+    rules = MeshRules.from_mesh(mesh)
+    if serving_params:
+        rules = rules.serving()       # TP-only weights: no FSDP gathers
+    b = shape.global_batch
+    max_len = shape.seq_len
+    fused = attention_impl == "fused"
+    # context-parallel decode only applies when the cache is seq-sharded
+    kl = T.decode_cache_len(cfg, max_len)
+    cp = (mesh if context_parallel and rules.tp(cfg.n_kv_heads) is None
+          and rules.tp_size and kl % rules.tp_size == 0 else None)
+
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos,
+                             fused_attention=fused,
+                             uniform_pos=uniform_pos, cp_mesh=cp)
+
+    params_abs = _abstract_params(cfg, param_dtype)
+    cache_abs = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, b, max_len, dtype=cache_dtype,
+                          enc_seq=cfg.encoder_seq_len))
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+
+    pspec = T.param_specs(cfg, rules)
+    cspec = T.cache_specs(cfg, rules, b, max_len)
+    bax = rules.batch(b)
+    logits_spec = P(bax, rules.tp(cfg.padded_vocab))
+
+    return StepBundle(
+        name=f"decode[{cfg.arch_id}/{shape.name}]",
+        fn=serve_step,
+        abstract_args=(params_abs, cache_abs, tok_abs, pos_abs),
+        in_shardings=(_ns(mesh, pspec), _ns(mesh, cspec),
+                      NamedSharding(mesh, P(bax, None)),
+                      NamedSharding(mesh, P(bax))),
+        out_shardings=(NamedSharding(mesh, logits_spec), _ns(mesh, cspec)),
+        donate_argnums=(1,),
+    )
+
+
+def make_bundle(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, **kw)
+    return make_decode_bundle(cfg, shape, mesh, **kw)

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 200 --seq-len 128 --batch 8 [--reduced] [--compress]
+
+On this CPU container, --reduced (default) trains the reduced config of the
+chosen architecture; full configs are for real pods (see launch/dryrun.py
+for the compile-only path).  The end-to-end ~100M-parameter run from the
+deliverables is ``examples/train_smollm.py`` (smollm-135m IS ~135M params,
+trained here at full width with shortened depth if --layers is given).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.services.compression import (CompressionConfig,
+                                             GradCompression)
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override layer count (0 = config value)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none",
+                    choices=["none", "dots", "full"])
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=-1)
+    ap.add_argument("--ckpt-dir", default="/tmp/coyote_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.layers)
+    shape = ShapeConfig("cli_train", "train", args.seq_len, args.batch)
+
+    comp = (GradCompression(CompressionConfig(bits=8, error_feedback=True))
+            if args.compress else None)
+    tcfg = TrainConfig(
+        steps=args.steps, log_every=max(args.steps // 20, 1),
+        ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir,
+        microbatches=args.microbatches, remat=args.remat,
+        seed=args.seed, fail_at_step=args.fail_at, compression=comp,
+        opt=AdamWConfig(lr=args.lr, total_steps=args.steps))
+
+    trainer = Trainer(cfg, shape, tcfg)
+    result = trainer.run()
+    print(json.dumps({"result": result,
+                      "log": trainer.metrics_log[-5:]}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""Model zoo: functional JAX models for all assigned architectures."""
+from repro.models import attention, layers, mlp, moe, ssm, transformer
+from repro.models.sharding import MeshRules, constrain, named
+from repro.models.transformer import (cache_specs, decode_step, forward,
+                                      init_cache, init_params, lm_logits,
+                                      loss_fn, param_specs, prefill)
+
+__all__ = [
+    "attention", "layers", "mlp", "moe", "ssm", "transformer",
+    "MeshRules", "constrain", "named",
+    "init_params", "param_specs", "forward", "loss_fn", "lm_logits",
+    "init_cache", "cache_specs", "prefill", "decode_step",
+]

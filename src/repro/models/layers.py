@@ -1,0 +1,108 @@
+"""Base layers: norms, dense projections, rotary/absolute embeddings.
+
+Pure-functional JAX: every module is an ``init_*`` returning a params pytree
+plus a ``*_specs`` returning the matching PartitionSpec pytree (a property
+test asserts the trees are congruent for every architecture).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import MeshRules
+
+
+# ---------------------------------------------------------------- dense ----
+def dense_init(rng, in_dim: int, out_dim: int, *, dtype=jnp.float32,
+               scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def bias_init(dim: int, *, dtype=jnp.float32):
+    return jnp.zeros((dim,), dtype=dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def norm_apply(params, x, eps: float = 1e-5):
+    if "bias" in params:
+        return layernorm(params, x, eps)
+    return rmsnorm(params, x, eps)
+
+
+def norm_specs(params_like: dict) -> dict:
+    return {k: P(None) for k in params_like}
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with even D; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                 # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, dim: int):
+    """Whisper-style absolute sinusoidal embeddings (n_pos, dim)."""
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, dim, 2, dtype=jnp.float32)
+                              / dim))
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)
+
+
+# ------------------------------------------------------------ embedding ----
+def embed_init(rng, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"table": (jax.random.normal(rng, (vocab, dim), dtype=jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed_specs(rules: MeshRules, vocab: int, d_model: int) -> dict:
+    # vocab rows FSDP-sharded + D on model when divisible: the lookup
+    # gathers only the touched rows; under zero3 the table shards 256-way.
+    return {"table": P(rules.fsdp(vocab), rules.tp(d_model))}
+
+
+def embed_lookup(params, ids):
+    return jnp.take(params["table"], ids, axis=0)

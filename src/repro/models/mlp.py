@@ -1,0 +1,55 @@
+"""Dense FFN: SwiGLU (llama-family) or GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import MeshRules
+
+
+def mlp_init(rng, cfg: ModelConfig, *, d_ff: int = 0, dtype=jnp.float32):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    r = jax.random.split(rng, 3)
+    if cfg.act == "silu":  # SwiGLU
+        return {
+            "w_gate": layers.dense_init(r[0], d, f, dtype=dtype),
+            "w_up": layers.dense_init(r[1], d, f, dtype=dtype),
+            "w_down": layers.dense_init(r[2], f, d, dtype=dtype),
+        }
+    return {
+        "w_up": layers.dense_init(r[0], d, f, dtype=dtype),
+        "b_up": layers.bias_init(f, dtype=dtype),
+        "w_down": layers.dense_init(r[1], f, d, dtype=dtype),
+        "b_down": layers.bias_init(d, dtype=dtype),
+    }
+
+
+def mlp_specs(cfg: ModelConfig, rules: MeshRules, *, d_ff: int = 0) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "w_gate": P(rules.fsdp(d), rules.tp(f)),
+            "w_up": P(rules.fsdp(d), rules.tp(f)),
+            "w_down": P(rules.tp(f), rules.fsdp(d)),
+        }
+    return {
+        "w_up": P(rules.fsdp(d), rules.tp(f)),
+        "b_up": P(rules.tp(f)),
+        "w_down": P(rules.tp(f), rules.fsdp(d)),
+        "b_down": P(None),
+    }
+
+
+def mlp_apply(params, cfg: ModelConfig, x):
+    if "w_gate" in params:
+        g = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+        u = x @ params["w_up"].astype(x.dtype)
+        return (g * u) @ params["w_down"].astype(x.dtype)
+    h = x @ params["w_up"].astype(x.dtype) + params["b_up"].astype(x.dtype)
+    h = jax.nn.gelu(h)
+    return h @ params["w_down"].astype(x.dtype) + params["b_down"].astype(x.dtype)

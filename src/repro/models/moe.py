@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN with capacity-based scatter dispatch.
+
+Dispatch avoids one-hot matmuls (they waste FLOPs and poison the roofline):
+tokens are scatter-added into per-expert capacity buffers, experts run as a
+batched einsum with the expert dim sharded on the `model` axis (expert
+parallelism — XLA inserts the all-to-all), and results gather back to token
+order.  Tokens overflowing an expert's capacity are dropped (gate zeroed),
+Switch-style.
+
+Shapes (per group of Tg tokens):
+  x (Tg, D) -> top-k (Tg, k) -> buf (E*C+1, D) -> experts (E, C, F) -> (Tg, D)
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import MeshRules
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    assert cfg.moe is not None
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    r = jax.random.split(rng, 5)
+
+    def ew(key, a, b):
+        return (jax.random.normal(key, (e.n_experts, a, b), dtype=jnp.float32)
+                / math.sqrt(a)).astype(dtype)
+
+    p = {
+        "router": layers.dense_init(r[0], d, e.n_experts, dtype=jnp.float32),
+        "w_gate": ew(r[1], d, f),
+        "w_up": ew(r[2], d, f),
+        "w_down": ew(r[3], f, d),
+    }
+    if e.n_shared_experts:
+        fs = e.n_shared_experts * f
+        rs = jax.random.split(r[4], 3)
+        p["shared"] = {
+            "w_gate": layers.dense_init(rs[0], d, fs, dtype=dtype),
+            "w_up": layers.dense_init(rs[1], d, fs, dtype=dtype),
+            "w_down": layers.dense_init(rs[2], fs, d, dtype=dtype),
+        }
+    return p
+
+
+def moe_specs(cfg: ModelConfig, rules: MeshRules) -> dict:
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    ep = rules.tp(e.n_experts)   # expert-parallel on the model axis
+    # d/f inner dims are NOT row-sharded: contracting a sharded dim would
+    # all-reduce full activation buffers per expert matmul (granite
+    # hillclimb g2.2) — per-expert weights are small, EP is the sharding.
+    s = {
+        "router": P(None, None),
+        "w_gate": P(ep, None, None),
+        "w_up": P(ep, None, None),
+        "w_down": P(ep, None, None),
+    }
+    if e.n_shared_experts:
+        fs = e.n_shared_experts * f
+        s["shared"] = {
+            "w_gate": P(rules.fsdp(d), rules.tp(fs)),
+            "w_up": P(rules.fsdp(d), rules.tp(fs)),
+            "w_down": P(rules.tp(fs), rules.fsdp(d)),
+        }
+    return s
+
+
+def _capacity(tg: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(tg * top_k * factor / n_experts))
+    return max(_round_up(c, 8), 8)
+
+
+def _dispatch_one_group(xg, gates, eidx, n_experts: int, capacity: int):
+    """xg (Tg, D); gates/eidx (Tg, k).  Returns (buf (E*C+1, D), dest, gates)."""
+    tg, k = eidx.shape
+    flat_e = eidx.reshape(-1)                                  # (Tg*k,)
+    oh = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)    # (Tg*k, E)
+    pos = jnp.sum(jnp.cumsum(oh, axis=0) * oh, axis=-1) - 1    # position in expert
+    dropped = pos >= capacity
+    dest = jnp.where(dropped, n_experts * capacity, flat_e * capacity + pos)
+    gates = jnp.where(dropped.reshape(tg, k), 0.0, gates)
+    x_rep = jnp.repeat(xg, k, axis=0)                          # (Tg*k, D)
+    buf = jnp.zeros((n_experts * capacity + 1, xg.shape[-1]), dtype=xg.dtype)
+    buf = buf.at[dest].add(x_rep)
+    return buf, dest, gates
+
+
+def moe_apply(params, cfg: ModelConfig, x, *, capacity_factor: float = 0.0,
+              group_size: int = 4096,
+              rules: "MeshRules" = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    ``rules``: sharding hints — dispatch buffers are constrained so token
+    groups stay on the data axes and the expert dim lands on `model`,
+    giving the partitioner the token<->expert all-to-all instead of
+    activation all-reduces."""
+    from repro.models.sharding import constrain
+    e = cfg.moe
+    capacity_factor = capacity_factor or e.capacity_factor
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, e.top_k)                # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balancing aux loss.
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    frac = jnp.mean(jax.nn.one_hot(eidx, e.n_experts, dtype=jnp.float32),
+                    axis=(0, 1))                               # (E,)
+    aux = e.n_experts * jnp.sum(frac * me)
+
+    # group tokens; groups stay batch-major so they align with data shards
+    gsz = min(group_size, t)
+    while t % gsz:
+        gsz //= 2
+    ng = t // gsz
+    cap = _capacity(gsz, e.top_k, e.n_experts, capacity_factor)
+
+    xg = xf.reshape(ng, gsz, d)
+    gg = gates.astype(xf.dtype).reshape(ng, gsz, e.top_k)
+    eg = eidx.reshape(ng, gsz, e.top_k)
+
+    bufs, dests, gs = jax.vmap(
+        lambda a, g_, i_: _dispatch_one_group(a, g_, i_, e.n_experts, cap)
+    )(xg, gg, eg)
+    # bufs (ng, E*C+1, D) -> expert batch (ng, E, C, D)
+    ein = bufs[:, :-1].reshape(ng, e.n_experts, cap, d)
+    if rules is not None:
+        # groups on data, experts on model: the partitioner reshapes this
+        # boundary into the token->expert all-to-all
+        ein = constrain(ein, P(rules.batch(ng), rules.tp(e.n_experts),
+                               None, None))
+
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ein, wg.astype(ein.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", ein, wu.astype(ein.dtype))
+    eout = jnp.einsum("gecf,efd->gecd", h, wd.astype(ein.dtype))
+    if rules is not None:
+        eout = constrain(eout, P(rules.batch(ng), None, None, None))
+    eflat = jnp.concatenate(
+        [eout.reshape(ng, e.n_experts * cap, d),
+         jnp.zeros((ng, 1, d), dtype=eout.dtype)], axis=1)     # dump row -> 0
+
+    def combine(ef, dest, g_):
+        y = jnp.take(ef, dest, axis=0)                         # (Tg*k, D)
+        y = y.reshape(gsz, e.top_k, d) * g_[..., None]
+        return jnp.sum(y, axis=1)
+
+    out = jax.vmap(combine)(eflat, dests, gs)                  # (ng, Tg, D)
+    out = out.reshape(b, s, d)
+
+    if e.n_shared_experts:
+        from repro.models.mlp import mlp_apply
+        out = out + mlp_apply(params["shared"], cfg, x)
+    return out, aux.astype(jnp.float32)

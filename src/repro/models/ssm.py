@@ -1,0 +1,288 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+The pure-jnp chunked SSD here is the reference path used for lowering and the
+dry-run; ``repro.kernels.ssd`` holds the Pallas TPU kernel for the same math
+(validated against :func:`ssd_chunked` in interpret mode).
+
+Weight layout uses *separate* projections (wz/wx/wB/wC/wdt) instead of one
+fused in_proj so each can carry its own PartitionSpec: head-indexed tensors
+shard on the `model` (TP) axis; B/C are group-shared (G ≪ H, like GQA KV
+heads) and stay column-replicated.  All head-dim einsums are then local under
+TP; only out_proj reduces across shards.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.models.sharding import MeshRules
+
+
+# ------------------------------------------------------------- weights ----
+def mamba_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    assert cfg.ssm is not None
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    r = jax.random.split(rng, 8)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 default)
+    dt = jnp.exp(jax.random.uniform(r[6], (nh,), dtype=jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "wz": layers.dense_init(r[0], d, di, dtype=dtype),
+        "wx": layers.dense_init(r[1], d, di, dtype=dtype),
+        "wB": layers.dense_init(r[2], d, gn, dtype=dtype),
+        "wC": layers.dense_init(r[3], d, gn, dtype=dtype),
+        "wdt": layers.dense_init(r[4], d, nh, dtype=dtype),
+        "conv_w": (jax.random.normal(r[5], (s.d_conv, di + 2 * gn),
+                                     dtype=jnp.float32)
+                   / math.sqrt(s.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * gn,), dtype=dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype=dtype)},
+        "wo": layers.dense_init(r[7], di, d, dtype=dtype),
+    }
+
+
+def mamba_specs(cfg: ModelConfig, rules: MeshRules) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    tp_i = rules.tp(di)
+    tp_h = rules.tp(nh)
+    return {
+        "wz": P(rules.fsdp(d), tp_i),
+        "wx": P(rules.fsdp(d), tp_i),
+        "wB": P(rules.fsdp(d), None),
+        "wC": P(rules.fsdp(d), None),
+        "wdt": P(rules.fsdp(d), tp_h),
+        # conv channels: x section shards with di only when the full concat
+        # dim keeps the x boundary on a shard edge; keep replicated (small).
+        "conv_w": P(None, None),
+        "conv_b": P(None),
+        "dt_bias": P(tp_h),
+        "A_log": P(tp_h),
+        "D": P(tp_h),
+        "norm": {"scale": P(tp_i)},
+        "wo": P(tp_i, rules.fsdp(d)),
+    }
+
+
+# ---------------------------------------------------------------- conv ----
+def causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv.  x (B,S,C); w (K,C); b (C,).
+
+    ``state`` (B,K-1,C): trailing context from the previous segment (decode /
+    chunked prefill).  Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), dtype=x.dtype)
+    xe = jnp.concatenate([state, x], axis=1)            # (B, S+K-1, C)
+    new_state = xe[:, -(k - 1):] if k > 1 else state
+    y = jnp.zeros_like(x)
+    for i in range(k):
+        y = y + xe[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    return jax.nn.silu(y), new_state
+
+
+# ----------------------------------------------------------------- SSD ----
+def ssd_chunked(x, dt, A, Bm, C, *, chunk: int,
+                init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (Mamba-2 alg. 1, pure jnp).
+
+    x (B,S,H,Pd); dt (B,S,H) post-softplus; A (H,) negative; Bm/C (B,S,G,N).
+    Returns (y (B,S,H,Pd), final_state (B,H,Pd,N)).
+    """
+    b, s_len, h, pd = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-s_len) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    # chunked views: (B, nc, L, ...) -> scan over nc
+    xc = x.reshape(b, nc, chunk, h, pd)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    a = dtc * A[None, None, None, :]                    # (B,nc,L,H) ≤ 0
+    cum = jnp.cumsum(a, axis=2)                         # within-chunk cumsum
+    seg_sum = cum[:, :, -1]                             # (B,nc,H)
+
+    # --- intra-chunk (diagonal) term, computed for all chunks at once ---
+    # decay L_mat[i,j] = exp(cum_i - cum_j) * dt_j for i >= j
+    li = cum[:, :, :, None, :]                          # (B,nc,L,1,H)
+    lj = cum[:, :, None, :, :]                          # (B,nc,1,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+    decay = jnp.where(mask[None, None, :, :, None],
+                      jnp.exp(li - lj), 0.0)            # (B,nc,L,L,H)
+    scores = jnp.einsum("bclgn,bcmgn->bclmg", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))         # (B,nc,L,L,G)
+    scores = jnp.repeat(scores, rep, axis=-1)           # -> heads
+    w = scores * decay * dtc[:, :, None, :, :]          # (B,nc,L,L,H)
+    y_diag = jnp.einsum("bclmh,bcmhp->bclhp", w, xc.astype(jnp.float32))
+
+    # --- per-chunk input states: sum_j exp(cum_last - cum_j) dt_j B_j x_j ---
+    dstate = jnp.exp(seg_sum[:, :, None, :] - cum) * dtc    # (B,nc,L,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                        # (B,nc,L,H,N)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        dstate, Bh.astype(jnp.float32),
+                        xc.astype(jnp.float32))             # (B,nc,H,Pd,N)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    if init_state is None:
+        init_state = jnp.zeros((b, h, pd, n), dtype=jnp.float32)
+
+    def step(carry, inp):
+        seg, st = inp                                   # (B,H), (B,H,Pd,N)
+        new = jnp.exp(seg)[:, :, None, None] * carry + st
+        return new, carry                               # emit state *before*
+
+    seg_t = jnp.moveaxis(seg_sum, 1, 0)                 # (nc,B,H)
+    st_t = jnp.moveaxis(states, 1, 0)                   # (nc,B,H,Pd,N)
+    final, prevs = jax.lax.scan(step, init_state.astype(jnp.float32),
+                                (seg_t, st_t))
+    prev_states = jnp.moveaxis(prevs, 0, 1)             # (B,nc,H,Pd,N)
+
+    # --- inter-chunk (off-diagonal) output: C_i · S_prev * exp(cum_i) ---
+    Ch = jnp.repeat(Cc, rep, axis=3)                    # (B,nc,L,H,N)
+    y_off = jnp.einsum("bclhn,bchpn->bclhp", Ch.astype(jnp.float32),
+                       prev_states) * jnp.exp(cum)[..., None]
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, pd)[:, :s_len]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode(x, dt, A, Bm, C, state):
+    """Single-token SSD update.  x (B,H,Pd); dt (B,H); Bm/C (B,G,N);
+    state (B,H,Pd,N) fp32.  Returns (y, new_state)."""
+    h = x.shape[1]
+    g = Bm.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)    # (B,H,N)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    da = jnp.exp(dt * A[None, :])                           # (B,H)
+    upd = (dt[:, :, None, None] * Bh[:, :, None, :]
+           * x.astype(jnp.float32)[..., None])              # (B,H,Pd,N)
+    new_state = da[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------- block ------
+def _gated_norm(scale, y, z, eps):
+    y = y * jax.nn.silu(z)
+    return layers.rmsnorm({"scale": scale}, y, eps)
+
+
+def _proj_all(params, cfg: ModelConfig, u):
+    """u (B,S,D) -> z, xBC(conv in), dt."""
+    s = cfg.ssm
+    z = u @ params["wz"].astype(u.dtype)
+    xp = u @ params["wx"].astype(u.dtype)
+    Bp = u @ params["wB"].astype(u.dtype)
+    Cp = u @ params["wC"].astype(u.dtype)
+    dt = u @ params["wdt"].astype(u.dtype)
+    return z, xp, Bp, Cp, dt
+
+
+def mamba_apply(params, cfg: ModelConfig, u, *, init=None):
+    """Full-sequence mamba2 block.  u (B,S,D) -> (out, final_cache).
+
+    ``init``/returned cache: {"conv": (B,K-1,C), "ssm": (B,H,Pd,N) fp32}.
+    """
+    s = cfg.ssm
+    b, sl, d = u.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    z, xp, Bp, Cp, dt = _proj_all(params, cfg, u)
+    xbc = jnp.concatenate([xp, Bp, Cp], axis=-1)
+    conv_state = None if init is None else init["conv"]
+    xbc, conv_state = causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  state=conv_state)
+    xp, Bp, Cp = jnp.split(xbc, [di, di + gn], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    x4 = xp.reshape(b, sl, nh, s.head_dim)
+    Bm = Bp.reshape(b, sl, s.n_groups, s.d_state)
+    Cm = Cp.reshape(b, sl, s.n_groups, s.d_state)
+    ssm_state = None if init is None else init["ssm"]
+    y, final = ssd_chunked(x4, dt, A, Bm, Cm, chunk=s.chunk_size,
+                           init_state=ssm_state)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * x4
+    y = y.reshape(b, sl, di)
+    y = _gated_norm(params["norm"]["scale"], y, z, cfg.norm_eps)
+    out = y @ params["wo"].astype(y.dtype)
+    return out, {"conv": conv_state, "ssm": final}
+
+
+def mamba_decode(params, cfg: ModelConfig, u, cache):
+    """One-token step.  u (B,1,D); cache {"conv","ssm"}."""
+    s = cfg.ssm
+    b, _, d = u.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    z, xp, Bp, Cp, dt = _proj_all(params, cfg, u)
+    xbc = jnp.concatenate([xp, Bp, Cp], axis=-1)
+    xbc, conv_state = causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  state=cache["conv"])
+    xp, Bp, Cp = jnp.split(xbc, [di, di + gn], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssd_decode(
+        xp[:, 0].reshape(b, nh, s.head_dim), dt, A,
+        Bp[:, 0].reshape(b, s.n_groups, s.d_state),
+        Cp[:, 0].reshape(b, s.n_groups, s.d_state), cache["ssm"])
+    y = y + params["D"][None, :, None].astype(y.dtype) \
+        * xp[:, 0].reshape(b, nh, s.head_dim)
+    y = y.reshape(b, 1, di)
+    y = _gated_norm(params["norm"]["scale"], y, z, cfg.norm_eps)
+    out = y @ params["wo"].astype(y.dtype)
+    return out, {"conv": conv_state, "ssm": new_state}
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, *, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    gn = s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * gn), dtype=dtype),
+        "ssm": jnp.zeros((batch, s.n_heads(d), s.head_dim, s.d_state),
+                         dtype=jnp.float32),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig, rules: MeshRules, batch: int) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.n_heads(d)
+    return {
+        "conv": P(rules.batch(batch), None, None),
+        "ssm": P(rules.batch(batch), rules.tp(nh), None, None),
+    }

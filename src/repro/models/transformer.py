@@ -1,0 +1,676 @@
+"""Model assembly for all ten assigned architectures.
+
+One functional model covers dense / MoE / SSM / hybrid / enc-dec families:
+
+  * ``init_params`` / ``param_specs``  — congruent pytrees (params ↔ P specs)
+  * ``forward``                         — full-sequence (train / prefill)
+  * ``init_cache`` / ``cache_specs``    — decode state (KV, ring, SSM, x-attn)
+  * ``prefill`` / ``decode_step``       — serving path
+
+Layers are stacked along a leading axis and applied with ``lax.scan`` so the
+lowered HLO stays O(1) in depth — an 80-layer qwen2-72b lowers as fast as a
+2-layer smoke model, which is what makes the 40-cell × 2-mesh dry-run
+tractable.  Hybrid patterns (zamba2) scan over *cycles* with one stacked
+param tree per pattern slot; the zamba2 attention block is a single shared
+param set (closure constant), faithful to the paper's shared-block design.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, layers, mlp, moe, ssm
+from repro.models.sharding import MeshRules, constrain
+
+
+# ====================================================================== util
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _uniform(cfg: ModelConfig) -> bool:
+    return len(cfg.block_pattern) == 1
+
+
+def _n_cycles(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % len(cfg.block_pattern) == 0, (
+        f"{cfg.arch_id}: n_layers {cfg.n_layers} not divisible by "
+        f"pattern {cfg.block_pattern}")
+    return cfg.n_layers // len(cfg.block_pattern)
+
+
+def _is_moe_layer(cfg: ModelConfig) -> bool:
+    return cfg.moe is not None
+
+
+# ============================================================ layer: init
+def _attn_layer_init(rng, cfg: ModelConfig, *, dtype, cross: bool = False):
+    r = jax.random.split(rng, 4)
+    p = {
+        "norm1": layers.rmsnorm_init(cfg.d_model, dtype=dtype),
+        "attn": attention.attn_init(r[0], cfg, dtype=dtype),
+        "norm2": layers.rmsnorm_init(cfg.d_model, dtype=dtype),
+    }
+    if cfg.act == "gelu":  # whisper uses LayerNorm
+        p["norm1"] = layers.layernorm_init(cfg.d_model, dtype=dtype)
+        p["norm2"] = layers.layernorm_init(cfg.d_model, dtype=dtype)
+    if _is_moe_layer(cfg):
+        p["ffn"] = moe.moe_init(r[1], cfg, dtype=dtype)
+    else:
+        p["ffn"] = mlp.mlp_init(r[1], cfg, dtype=dtype)
+    if cross:
+        p["norm_x"] = (layers.layernorm_init(cfg.d_model, dtype=dtype)
+                       if cfg.act == "gelu"
+                       else layers.rmsnorm_init(cfg.d_model, dtype=dtype))
+        p["xattn"] = attention.attn_init(r[2], cfg, dtype=dtype)
+    return p
+
+
+def _mamba_layer_init(rng, cfg: ModelConfig, *, dtype):
+    return {
+        "norm": layers.rmsnorm_init(cfg.d_model, dtype=dtype),
+        "mamba": ssm.mamba_init(rng, cfg, dtype=dtype),
+    }
+
+
+def _attn_layer_specs(cfg: ModelConfig, rules: MeshRules,
+                      *, cross: bool = False):
+    s = {
+        "norm1": layers.norm_specs(
+            layers.layernorm_init(1) if cfg.act == "gelu"
+            else layers.rmsnorm_init(1)),
+        "attn": attention.attn_specs(cfg, rules),
+        "norm2": layers.norm_specs(
+            layers.layernorm_init(1) if cfg.act == "gelu"
+            else layers.rmsnorm_init(1)),
+    }
+    if _is_moe_layer(cfg):
+        s["ffn"] = moe.moe_specs(cfg, rules)
+    else:
+        s["ffn"] = mlp.mlp_specs(cfg, rules)
+    if cross:
+        s["norm_x"] = s["norm1"]
+        s["xattn"] = attention.attn_specs(cfg, rules)
+    return s
+
+
+def _mamba_layer_specs(cfg: ModelConfig, rules: MeshRules):
+    return {
+        "norm": layers.norm_specs(layers.rmsnorm_init(1)),
+        "mamba": ssm.mamba_specs(cfg, rules),
+    }
+
+
+def init_params(rng, cfg: ModelConfig, *, dtype=jnp.bfloat16) -> Dict:
+    """Full parameter pytree, layers stacked for lax.scan."""
+    keys = jax.random.split(rng, cfg.n_layers + 8)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                   dtype=dtype),
+        "final_norm": (layers.layernorm_init(cfg.d_model, dtype=dtype)
+                       if cfg.act == "gelu"
+                       else layers.rmsnorm_init(cfg.d_model, dtype=dtype)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(keys[1], cfg.d_model,
+                                         cfg.padded_vocab, dtype=dtype)
+
+    cross = cfg.n_encoder_layers > 0
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        per = [(_mamba_layer_init(keys[2 + i], cfg, dtype=dtype)
+                if kind == "mamba" else
+                _attn_layer_init(keys[2 + i], cfg, dtype=dtype, cross=cross))
+               for i in range(cfg.n_layers)]
+        p["layers"] = _stack_trees(per)
+    else:
+        nc = _n_cycles(cfg)
+        slots = []
+        shared_attn = None
+        for si, kind in enumerate(cfg.block_pattern):
+            if kind == "shared_attn":
+                shared_attn = _attn_layer_init(keys[2 + si], cfg, dtype=dtype)
+                slots.append(None)
+            else:
+                per = [_mamba_layer_init(
+                    jax.random.fold_in(keys[2 + si], c), cfg, dtype=dtype)
+                    for c in range(nc)]
+                slots.append(_stack_trees(per))
+        p["slots"] = tuple(s for s in slots if s is not None)
+        if shared_attn is not None:
+            p["shared_attn"] = shared_attn
+
+    if cross:
+        enc = [_attn_layer_init(jax.random.fold_in(keys[-1], i), cfg,
+                                dtype=dtype)
+               for i in range(cfg.n_encoder_layers)]
+        p["encoder"] = {
+            "layers": _stack_trees(enc),
+            "final_norm": layers.layernorm_init(cfg.d_model, dtype=dtype),
+        }
+    return p
+
+
+def param_specs(cfg: ModelConfig, rules: MeshRules) -> Dict:
+    """PartitionSpec pytree congruent with init_params output.
+
+    Stacked layer dim is never sharded (it is the scan axis)."""
+    def lift(tree):  # prepend None for the stacked layer axis
+        return jax.tree.map(lambda sp: P(*((None,) + tuple(sp))), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    s: Dict[str, Any] = {
+        "embed": layers.embed_specs(rules, cfg.padded_vocab,
+                                    cfg.d_model),
+        "final_norm": layers.norm_specs(
+            layers.layernorm_init(1) if cfg.act == "gelu"
+            else layers.rmsnorm_init(1)),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = P(rules.fsdp(cfg.d_model), rules.tp(cfg.padded_vocab))
+
+    cross = cfg.n_encoder_layers > 0
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        per = (_mamba_layer_specs(cfg, rules) if kind == "mamba"
+               else _attn_layer_specs(cfg, rules, cross=cross))
+        s["layers"] = lift(per)
+    else:
+        slots = []
+        shared = None
+        for kind in cfg.block_pattern:
+            if kind == "shared_attn":
+                shared = _attn_layer_specs(cfg, rules)
+            else:
+                slots.append(lift(_mamba_layer_specs(cfg, rules)))
+        s["slots"] = tuple(slots)
+        if shared is not None:
+            s["shared_attn"] = shared
+
+    if cross:
+        s["encoder"] = {
+            "layers": lift(_attn_layer_specs(cfg, rules)),
+            "final_norm": layers.norm_specs(layers.layernorm_init(1)),
+        }
+    return s
+
+
+# ====================================================== layer: full-seq fwd
+def _attn_block_fwd(p, cfg: ModelConfig, x, *, causal: bool, q_offset: int,
+                    enc_out=None, fused: bool = False, rules=None):
+    """Self-attn (+optional cross-attn) + FFN with residuals.  Returns
+    (x, aux, (k, v)) — k/v pre-RoPE'd, for prefill cache capture."""
+    h = layers.norm_apply(p["norm1"], x, cfg.norm_eps)
+    q, k, v = attention.qkv_proj(p["attn"], cfg, h)
+    if cfg.pos_embed == "rope":
+        pos = q_offset + jnp.arange(x.shape[1])
+        q = layers.apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[None, :], cfg.rope_theta)
+    att = attention.attend_chunked(q, k, v, causal=causal,
+                                   window=cfg.swa_window, q_offset=0,
+                                   fused=fused)
+    x = x + attention.out_proj(p["attn"], cfg, att)
+
+    xkv = None
+    if enc_out is not None:
+        hx = layers.norm_apply(p["norm_x"], x, cfg.norm_eps)
+        qx = (hx @ p["xattn"]["wq"].astype(hx.dtype)).reshape(
+            hx.shape[0], hx.shape[1], cfg.n_heads, cfg.resolved_head_dim)
+        ek = (enc_out @ p["xattn"]["wk"].astype(enc_out.dtype)).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+            cfg.resolved_head_dim)
+        ev = (enc_out @ p["xattn"]["wv"].astype(enc_out.dtype)).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads,
+            cfg.resolved_head_dim)
+        ax = attention.attend_chunked(qx, ek, ev, causal=False,
+                                      fused=fused)
+        x = x + attention.out_proj(p["xattn"], cfg, ax)
+        xkv = (ek, ev)
+
+    h = layers.norm_apply(p["norm2"], x, cfg.norm_eps)
+    if _is_moe_layer(cfg):
+        out, aux = moe.moe_apply(p["ffn"], cfg, h, rules=rules)
+    else:
+        out, aux = mlp.mlp_apply(p["ffn"], cfg, h), jnp.float32(0.0)
+    return x + out, aux, (k, v), xkv
+
+
+def _mamba_block_fwd(p, cfg: ModelConfig, x):
+    h = layers.norm_apply(p["norm"], x, cfg.norm_eps)
+    out, final_cache = ssm.mamba_apply(p["mamba"], cfg, h)
+    return x + out, final_cache
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder: frames (B, enc_seq, D) -> enc_out (B, enc_seq, D)."""
+    pe = layers.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = frames + pe[None].astype(frames.dtype)
+
+    def body(x, lp):
+        x, _, _, _ = _attn_block_fwd(lp, cfg, x, causal=False, q_offset=0)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return layers.norm_apply(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, *, offset=0):
+    x = layers.embed_lookup(params["embed"], tokens)
+    if cfg.pos_embed == "absolute":
+        pe = layers.sinusoidal_positions(int(offset) + tokens.shape[1],
+                                         cfg.d_model)[int(offset):]
+        x = x + pe[None].astype(x.dtype)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, *, encoder_frames=None,
+            remat: str = "none", rules: Optional[MeshRules] = None,
+            collect_kv: bool = False, compute_dtype=None,
+            fused_attention: bool = False):
+    """Full-sequence forward.  tokens (B, S) int32.
+
+    Returns (hidden (B,S,D), aux_loss, kv_stack_or_None, enc_out_or_None).
+    ``collect_kv``: emit per-layer (k, v) (and cross-attn KV) for prefill.
+    ``compute_dtype``: activation dtype (params stay fp32 masters; weights
+    cast at use sites) — bf16 in production, None keeps the param dtype.
+    """
+    x = _embed_tokens(params, cfg, tokens)
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        if encoder_frames is not None:
+            encoder_frames = encoder_frames.astype(compute_dtype)
+    if rules is not None:
+        x = constrain(x, P(rules.batch(tokens.shape[0]), None, None))
+
+    enc_out = None
+    if cfg.n_encoder_layers:
+        assert encoder_frames is not None, f"{cfg.arch_id} needs frames"
+        enc_out = encode(params, cfg, encoder_frames)
+
+    aux_total = jnp.float32(0.0)
+    kv_stack = None
+    xkv_stack = None
+
+    mamba_states = None
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        if kind == "mamba":
+            def body(x, lp):
+                x, fc = _mamba_block_fwd(lp, cfg, x)
+                return x, (fc if collect_kv else None)
+            x, mamba_states = jax.lax.scan(_remat(body, remat), x,
+                                           params["layers"])
+        else:
+            def body(x, lp):
+                x, aux, kv, xkv = _attn_block_fwd(
+                    lp, cfg, x, causal=True, q_offset=0, enc_out=enc_out,
+                    fused=fused_attention, rules=rules)
+                out = (aux, kv if collect_kv else None,
+                       xkv if (collect_kv and enc_out is not None) else None)
+                return x, out
+            x, (auxs, kvs, xkvs) = jax.lax.scan(
+                _remat(body, remat), x, params["layers"])
+            aux_total = jnp.sum(auxs)
+            kv_stack = kvs
+            xkv_stack = xkvs
+    else:
+        shared = params.get("shared_attn")
+        pattern = cfg.block_pattern
+
+        def body(x, slot_params):
+            kvs = None
+            states = []
+            si = 0
+            for kind in pattern:
+                if kind == "shared_attn":
+                    x, _, kv, _ = _attn_block_fwd(shared, cfg, x, causal=True,
+                                                  q_offset=0,
+                                                  fused=fused_attention)
+                    kvs = kv if collect_kv else None
+                else:
+                    x, fc = _mamba_block_fwd(slot_params[si], cfg, x)
+                    states.append(fc)
+                    si += 1
+            if collect_kv:
+                ms = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            else:
+                ms = None
+            return x, (kvs, ms)
+        x, (kvs, mamba_states) = jax.lax.scan(_remat(body, remat), x,
+                                              params["slots"])
+        kv_stack = kvs
+
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total, kv_stack, (enc_out, xkv_stack, mamba_states)
+
+
+def lm_logits(params, cfg: ModelConfig, hidden,
+              rules: Optional[MeshRules] = None):
+    """hidden (..., D) -> logits (..., V) fp32."""
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(jnp.float32)
+        logits = hidden.astype(jnp.float32) @ w.T
+    else:
+        logits = hidden.astype(jnp.float32) @ params["lm_head"].astype(
+            jnp.float32)
+    if rules is not None and logits.ndim == 3:
+        logits = constrain(logits, P(rules.batch(logits.shape[0]), None,
+                                     rules.tp(cfg.padded_vocab)))
+    return logits
+
+
+def xent_loss(params, cfg: ModelConfig, hidden, labels, mask, *,
+              rules: Optional[MeshRules] = None, chunk: int = 256):
+    """Chunked cross-entropy so (B,S,V) logits never fully materialise.
+
+    hidden (B,S,D); labels/mask (B,S).  Returns (loss, n_tokens)."""
+    b, s_len, d = hidden.shape
+    chunk = min(chunk, s_len)
+    while s_len % chunk:
+        chunk //= 2
+    nc = s_len // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        h, l, m = inp
+        logits = lm_logits(params, cfg, h, rules)          # (B,c,V) fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll = (lse - tgt) * m
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(m)), None
+
+    (tot, n), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                               (hc, lc, mc))
+    return tot / jnp.maximum(n, 1.0), n
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: str = "none",
+            rules: Optional[MeshRules] = None, aux_weight: float = 0.01,
+            compute_dtype=None, fused_attention: bool = False):
+    """batch: {"tokens" (B,S), optional "frames"}.  Next-token LM loss."""
+    tokens = batch["tokens"]
+    hidden, aux, _, _ = forward(params, cfg, tokens,
+                                encoder_frames=batch.get("frames"),
+                                remat=remat, rules=rules,
+                                compute_dtype=compute_dtype,
+                                fused_attention=fused_attention)
+    labels = jnp.concatenate([tokens[:, 1:],
+                              jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], dtype=jnp.float32),
+         jnp.zeros_like(tokens[:, :1], dtype=jnp.float32)], axis=1)
+    loss, n = xent_loss(params, cfg, hidden, labels, mask, rules=rules)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux, "tokens": n}
+
+
+# ================================================================= caches
+def decode_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Physical KV length: SWA archs cap at their window (ring buffer)."""
+    if cfg.swa_window:
+        return min(max_len, cfg.swa_window)
+    if cfg.family == "hybrid":
+        # zamba2 shared-attn blocks: windowed KV (DESIGN.md §5)
+        return min(max_len, 4096)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               dtype=jnp.bfloat16, enc_seq: int = 0) -> Dict:
+    """Decode-state pytree, stacked on the layer axis for lax.scan."""
+    hd = cfg.resolved_head_dim
+    kl = decode_cache_len(cfg, max_len)
+    c: Dict[str, Any] = {}
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        ln = cfg.n_layers
+        if kind == "mamba":
+            c["mamba"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (ln,) + x.shape).copy()
+                if False else jnp.zeros((ln,) + x.shape, x.dtype),
+                ssm.mamba_cache_init(cfg, batch, dtype=dtype))
+        else:
+            c["k"] = jnp.zeros((ln, batch, kl, cfg.n_kv_heads, hd), dtype)
+            c["v"] = jnp.zeros((ln, batch, kl, cfg.n_kv_heads, hd), dtype)
+            if cfg.n_encoder_layers:
+                c["xk"] = jnp.zeros((ln, batch, enc_seq, cfg.n_kv_heads, hd),
+                                    dtype)
+                c["xv"] = jnp.zeros((ln, batch, enc_seq, cfg.n_kv_heads, hd),
+                                    dtype)
+    else:
+        nc = _n_cycles(cfg)
+        n_mamba = sum(1 for k in cfg.block_pattern if k != "shared_attn")
+        base = ssm.mamba_cache_init(cfg, batch, dtype=dtype)
+        c["mamba"] = jax.tree.map(
+            lambda x: jnp.zeros((nc, n_mamba) + x.shape, x.dtype), base)
+        c["k"] = jnp.zeros((nc, batch, kl, cfg.n_kv_heads, hd), dtype)
+        c["v"] = jnp.zeros((nc, batch, kl, cfg.n_kv_heads, hd), dtype)
+    return c
+
+
+def cache_specs(cfg: ModelConfig, rules: MeshRules, batch: int,
+                max_len: int) -> Dict:
+    """Sharding for the decode cache.
+
+    KV heads shard on `model` when divisible; otherwise the *sequence* dim
+    shards on `model` (context-parallel decode — softmax reductions become
+    collectives, which the roofline analysis accounts for)."""
+    kl = decode_cache_len(cfg, max_len)
+    bax = rules.batch(batch)
+    kv_tp = rules.tp(cfg.n_kv_heads)
+    seq_tp = None if kv_tp is not None else rules.tp(kl)
+    kv_spec = P(None, bax, seq_tp, kv_tp, None)
+    s: Dict[str, Any] = {}
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        if kind == "mamba":
+            ms = ssm.mamba_cache_specs(cfg, rules, batch)
+            s["mamba"] = jax.tree.map(
+                lambda sp: P(*((None,) + tuple(sp))), ms,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            s["k"] = kv_spec
+            s["v"] = kv_spec
+            if cfg.n_encoder_layers:
+                s["xk"] = P(None, bax, None, kv_tp, None)
+                s["xv"] = P(None, bax, None, kv_tp, None)
+    else:
+        ms = ssm.mamba_cache_specs(cfg, rules, batch)
+        s["mamba"] = jax.tree.map(
+            lambda sp: P(*((None, None) + tuple(sp))), ms,
+            is_leaf=lambda x: isinstance(x, P))
+        s["k"] = kv_spec
+        s["v"] = kv_spec
+    return s
+
+
+# =============================================================== decode ====
+def _attn_block_decode(p, cfg: ModelConfig, x, kc, vc, pos, *,
+                       xk=None, xv=None, fused: bool = False,
+                       uniform_pos: bool = False, cp_mesh=None):
+    """One-token attention block.  x (B,1,D); kc/vc (B,KL,K,hd); pos (B,)."""
+    kl = kc.shape[1]
+    ring = bool(cfg.swa_window) or cfg.family == "hybrid"
+    h = layers.norm_apply(p["norm1"], x, cfg.norm_eps)
+    q, k, v = attention.qkv_proj(p["attn"], cfg, h)
+    if cfg.pos_embed == "rope":
+        q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+    if ring:
+        kc, vc = attention.cache_update_ring(kc, vc, k, v, pos)
+        att = attention.attend_decode_swa(q, kc, vc, pos,
+                                          cfg.swa_window or kl)
+    else:
+        if uniform_pos:
+            kc, vc = attention.cache_update_uniform(kc, vc, k, v, pos[0])
+        else:
+            kc, vc = attention.cache_update(kc, vc, k, v, pos)
+        if cp_mesh is not None:
+            att = attention.attend_decode_cp(q, kc, vc, pos + 1, cp_mesh,
+                                             fused=fused)
+        else:
+            att = attention.attend_decode(q, kc, vc, pos + 1, fused=fused)
+    x = x + attention.out_proj(p["attn"], cfg, att)
+
+    if xk is not None:
+        hx = layers.norm_apply(p["norm_x"], x, cfg.norm_eps)
+        b = hx.shape[0]
+        qx = (hx @ p["xattn"]["wq"].astype(hx.dtype)).reshape(
+            b, 1, cfg.n_heads, cfg.resolved_head_dim)
+        ax = attention.attend_decode(
+            qx, xk, xv, jnp.full((b,), xk.shape[1], jnp.int32))
+        x = x + attention.out_proj(p["xattn"], cfg, ax)
+
+    h = layers.norm_apply(p["norm2"], x, cfg.norm_eps)
+    if _is_moe_layer(cfg):
+        out, _ = moe.moe_apply(p["ffn"], cfg, h)
+    else:
+        out = mlp.mlp_apply(p["ffn"], cfg, h)
+    return x + out, kc, vc
+
+
+def _mamba_block_decode(p, cfg: ModelConfig, x, cache):
+    h = layers.norm_apply(p["norm"], x, cfg.norm_eps)
+    out, cache = ssm.mamba_decode(p["mamba"], cfg, h, cache)
+    return x + out, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict, tokens, pos,
+                *, fused_attention: bool = False,
+                uniform_pos: bool = False, cp_mesh=None):
+    """One decode step.  tokens (B,1) int32; pos (B,) current positions.
+
+    Returns (logits (B,V) fp32, new_cache).  Cache should be donated."""
+    x = _embed_tokens_decode(params, cfg, tokens, pos)
+
+    if _uniform(cfg):
+        kind = cfg.block_pattern[0]
+        if kind == "mamba":
+            def body(x, inp):
+                lp, mc = inp
+                x, mc = _mamba_block_decode(lp, cfg, x, mc)
+                return x, mc
+            x, mcache = jax.lax.scan(body, x,
+                                     (params["layers"], cache["mamba"]))
+            new_cache = {"mamba": mcache}
+        else:
+            has_x = cfg.n_encoder_layers > 0
+            def body(x, inp):
+                if has_x:
+                    lp, kc, vc, xk, xv = inp
+                else:
+                    lp, kc, vc = inp
+                    xk = xv = None
+                x, kc, vc = _attn_block_decode(lp, cfg, x, kc, vc, pos,
+                                               xk=xk, xv=xv,
+                                               fused=fused_attention,
+                                               uniform_pos=uniform_pos,
+                                               cp_mesh=cp_mesh)
+                return x, (kc, vc)
+            xs = ((params["layers"], cache["k"], cache["v"], cache["xk"],
+                   cache["xv"]) if has_x
+                  else (params["layers"], cache["k"], cache["v"]))
+            x, (ks, vs) = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache)
+            new_cache["k"], new_cache["v"] = ks, vs
+    else:
+        shared = params.get("shared_attn")
+        pattern = cfg.block_pattern
+
+        def body(x, inp):
+            slot_params, mc, kc, vc = inp
+            si = 0
+            new_mc = []
+            for kind in pattern:
+                if kind == "shared_attn":
+                    x, kc, vc = _attn_block_decode(shared, cfg, x, kc, vc,
+                                                   pos,
+                                                   fused=fused_attention,
+                                                   uniform_pos=uniform_pos)
+                else:
+                    sub = jax.tree.map(lambda a: a[si], mc)
+                    x, sub = _mamba_block_decode(slot_params[si], cfg, x, sub)
+                    new_mc.append(sub)
+                    si += 1
+            mc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_mc)
+            return x, (mc, kc, vc)
+
+        x, (mcs, ks, vs) = jax.lax.scan(
+            body, x, (params["slots"], cache["mamba"], cache["k"],
+                      cache["v"]))
+        new_cache = {"mamba": mcs, "k": ks, "v": vs}
+
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def _embed_tokens_decode(params, cfg: ModelConfig, tokens, pos):
+    x = layers.embed_lookup(params["embed"], tokens)
+    if cfg.pos_embed == "absolute":
+        # sinusoidal at per-row position
+        d = cfg.d_model
+        inv = 1.0 / (10_000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+        ang = pos[:, None].astype(jnp.float32) * inv[None]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[:, None].astype(x.dtype)
+    return x
+
+
+# ============================================================== prefill ====
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+            encoder_frames=None, rules: Optional[MeshRules] = None,
+            cache_dtype=jnp.bfloat16, fused_attention: bool = False):
+    """Run the full prompt, build the decode cache, return last-token logits.
+
+    tokens (B, S).  Cache is sized for ``max_len`` (or the SWA window)."""
+    b, s_len = tokens.shape
+    hidden, _, kv_stack, (enc_out, xkv, mamba_states) = forward(
+        params, cfg, tokens, encoder_frames=encoder_frames, rules=rules,
+        collect_kv=True, fused_attention=fused_attention)
+    cache = init_cache(cfg, b, max_len, dtype=cache_dtype,
+                       enc_seq=0 if enc_out is None else enc_out.shape[1])
+    kl = decode_cache_len(cfg, max_len)
+
+    def fill(kc, knew):
+        # knew (L?, B, S, K, hd) -> write into (L?, B, KL, K, hd)
+        knew = knew.astype(kc.dtype)
+        if s_len <= kl:
+            return jax.lax.dynamic_update_slice(
+                kc, knew, (0,) * kc.ndim)
+        # ring: keep last KL tokens at slot = abs_pos % KL
+        tail = knew[..., s_len - kl:, :, :]
+        slots = (jnp.arange(s_len - kl, s_len)) % kl
+        order = jnp.argsort(slots)
+        return jnp.take(tail, order, axis=-3)
+
+    if kv_stack is not None:
+        ks, vs = kv_stack
+        cache["k"] = fill(cache["k"], ks)
+        cache["v"] = fill(cache["v"], vs)
+    if cfg.n_encoder_layers and xkv is not None:
+        cache["xk"] = xkv[0].astype(cache["xk"].dtype)
+        cache["xv"] = xkv[1].astype(cache["xv"].dtype)
+    if mamba_states is not None:
+        cache["mamba"] = jax.tree.map(
+            lambda dst, src: src.astype(dst.dtype), cache["mamba"],
+            mamba_states)
+
+    logits = lm_logits(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, cache

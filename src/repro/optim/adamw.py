@@ -1,0 +1,107 @@
+"""AdamW with global-norm clipping and cosine schedule (pure pytree ops).
+
+Mixed-precision contract: params are stored fp32 (the "master" copy), the
+model casts weights to the activation dtype at use sites, and the optimizer
+moments are fp32 — 16 bytes/param of optimizer+param state, FSDP-sharded
+with the same PartitionSpecs as the parameters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_frac*lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac
+                    + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(param_specs_tree) -> Dict[str, Any]:
+    """Optimizer state shards exactly like the parameters."""
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_specs_tree, "v": param_specs_tree, "step": P()}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads, state, params, cfg: AdamWConfig, *,
+           no_decay=lambda path: ("norm" in path or "bias" in path
+                                  or path.endswith("scale"))):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p = _flatten_with_path(params)
+    flat_g = _flatten_with_path(grads)
+    flat_m = _flatten_with_path(state["m"])
+    flat_v = _flatten_with_path(state["v"])
+
+    new_p, new_m, new_v = {}, {}, {}
+    for path in flat_p:
+        p = flat_p[path]
+        g = flat_g[path].astype(jnp.float32) * scale
+        m = cfg.b1 * flat_m[path] + (1 - cfg.b1) * g
+        v = cfg.b2 * flat_v[path] + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if not no_decay(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p[path] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_m[path] = m
+        new_v[path] = v
+
+    treedef = jax.tree.structure(params)
+    unflat = lambda d: jax.tree.unflatten(treedef, [d[k] for k in flat_p])
+    new_state = {"m": unflat(new_m), "v": unflat(new_v), "step": step}
+    return unflat(new_p), new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def _flatten_with_path(tree) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out["/".join(_key_str(k) for k in path)] = leaf
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

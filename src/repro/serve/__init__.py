@@ -1,0 +1,7 @@
+from repro.serve.engine import Request, ServingEngine
+from repro.serve.paged_model import decode_step_paged, make_pools, write_prefill
+from repro.serve.sampler import SamplerConfig, sample
+from repro.serve.disaggregated import handoff_wire_bytes, make_handoff_fn
+__all__ = ["Request", "ServingEngine", "decode_step_paged", "make_pools",
+           "write_prefill", "SamplerConfig", "sample",
+           "handoff_wire_bytes", "make_handoff_fn"]

@@ -1,0 +1,178 @@
+"""Continuous-batching serving engine on the MMU's paged KV cache.
+
+The LLM mirror of the paper's multi-threaded AES pipeline (Fig 1/9/10):
+token-by-token decode has a strict sequential dependence per request, so a
+single stream leaves the pipeline idle — the engine fills the bubbles by
+interleaving many concurrent requests (cThread streams) into one batched
+decode step.  Admission is credit-based (page budget via the MMU), pages
+are allocated on demand and freed at completion, and finished rows are
+immediately replaced from the queue (continuous batching).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.services.mmu import MMU, MMUConfig
+from repro.models import transformer as T
+from repro.serve.paged_model import (decode_step_paged, make_pools,
+                                     write_prefill)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0          # 0 = greedy
+    tid: int = 0                      # submitting cThread
+    out_tokens: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, mmu: MMU, *,
+                 max_batch: int = 8, max_len: int = 1024,
+                 use_pallas: bool = False, seed: int = 0):
+        assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
+            "paged engine serves attention archs (DESIGN.md §5)"
+        self.cfg = cfg
+        self.params = params
+        self.mmu = mmu
+        self.page = mmu.config.page_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.max_pages = -(-max_len // self.page)
+        self.use_pallas = use_pallas
+        self.pools = make_pools(cfg, mmu.config.n_pages, self.page)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self._rng = np.random.RandomState(seed)
+        self._rid = itertools.count(1)
+        self.completed: List[Request] = []
+        self.steps = 0
+        self.tokens_out = 0
+
+    # -------------------------------------------------------------- API ----
+    def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
+               temperature: float = 0.0, tid: int = 0) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(
+            rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
+            temperature=temperature, tid=tid, t_submit=time.perf_counter()))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def pending(self) -> bool:
+        return self.active > 0 or bool(self.queue)
+
+    # -------------------------------------------------------- admission ----
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = -(-(len(req.prompt) + req.max_new_tokens) // self.page)
+            if need > self.mmu.config.n_pages - (
+                    self.mmu.utilization()["pages_used"]):
+                break                          # page credits exhausted
+            self.queue.popleft()
+            self.mmu.alloc_seq(req.rid, len(req.prompt), slot=i)
+            self.slots[i] = req
+            self._prefill(i, req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        hidden, _, kv_stack, _ = T.forward(self.params, self.cfg, toks,
+                                           collect_kv=True)
+        tables = jnp.asarray(
+            self.mmu.block_table([req.rid], self.max_pages))
+        lens = jnp.asarray([len(req.prompt)], jnp.int32)
+        self.pools = write_prefill(self.pools, kv_stack, tables, lens,
+                                   self.page)
+        logits = T.lm_logits(self.params, self.cfg, hidden[:, -1])
+        tok = self._sample(np.asarray(logits), req.temperature)[0]
+        req.out_tokens.append(int(tok))
+        req.t_first_token = time.perf_counter()
+        self.mmu.extend_seq(req.rid, 1, slot=slot)
+        self.tokens_out += 1
+
+    def _sample(self, logits: np.ndarray, temperature: float) -> np.ndarray:
+        logits = logits[..., :self.cfg.vocab_size]
+        if temperature <= 0:
+            return np.argmax(logits, axis=-1)
+        z = logits / temperature
+        z = z - z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.array([self._rng.choice(p.shape[-1], p=row)
+                         for row in p])
+
+    # ------------------------------------------------------------ decode ----
+    def step(self) -> int:
+        """One continuous-batching engine step; returns tokens emitted."""
+        self._admit()
+        if self.active == 0:
+            return 0
+        rids = [r.rid if r is not None else -1 for r in self.slots]
+        live = [r for r in self.slots if r is not None]
+        tables = np.full((self.max_batch, self.max_pages), -1, np.int32)
+        lens = np.zeros((self.max_batch,), np.int32)
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tables[i] = self.mmu.block_table([req.rid], self.max_pages)[0]
+            # length BEFORE this step's token (its write position)
+            lens[i] = len(req.prompt) + len(req.out_tokens) - 1
+            tokens[i, 0] = req.out_tokens[-1]
+
+        logits, self.pools = decode_step_paged(
+            self.params, self.pools, jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(tokens), cfg=self.cfg, page_size=self.page,
+            use_pallas=self.use_pallas)
+        logits = np.asarray(logits)
+        self.steps += 1
+
+        emitted = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(self._sample(logits[i][None], req.temperature)[0])
+            req.out_tokens.append(tok)
+            emitted += 1
+            self.mmu.extend_seq(req.rid, 1, slot=i)
+            total = len(req.prompt) + len(req.out_tokens)
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or total >= self.max_len):
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.mmu.free_seq(req.rid)
+                self.completed.append(req)
+                self.slots[i] = None
+        self.tokens_out += emitted
+        return emitted
+
+    def run(self, max_steps: int = 10_000) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        while self.pending() and self.steps < max_steps:
+            self.step()
+        dt = time.perf_counter() - t0
+        return {"wall_s": dt, "engine_steps": self.steps,
+                "tokens": self.tokens_out,
+                "tokens_per_s": self.tokens_out / max(dt, 1e-9),
+                "completed": len(self.completed)}

@@ -1,0 +1,119 @@
+"""Decode path through the MMU's paged KV pools.
+
+The serving twin of ``repro.models.transformer.decode_step``: instead of a
+dense per-sequence cache, KV lives in the MMU service's page pools and
+attention walks the block tables (via the Pallas paged-attention kernel or
+its oracle).  Pools are stacked on the layer axis and scanned, so depth
+never bloats the HLO; pool buffers are donated every step.
+
+Applicability: attention-family architectures.  SSM archs have O(1) decode
+state and bypass paging (DESIGN.md §5 — their MMU use is the constant-size
+state page).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention.ops import paged_decode
+from repro.models import attention, layers, mlp, moe
+from repro.models.transformer import _is_moe_layer, lm_logits
+
+
+def make_pools(cfg: ModelConfig, n_pages: int, page_size: int, *,
+               dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_prefill(pools, layer_kv, tables, lens, page_size: int):
+    """Scatter a prefilled sequence batch into the pools.
+
+    layer_kv: (ks, vs) each (L, B, S, K, hd); tables (B, maxp) int32;
+    lens (B,) prompt lengths (tokens beyond a row's len are dropped via a
+    dump page at pool slot... they are written to page 0 offset 0 of their
+    own page id — callers allocate exact pages so S == max len in batch).
+    """
+    ks, vs = layer_kv
+    l, b, s, kh, hd = ks.shape
+    pos = jnp.arange(s)
+    vpage = pos // page_size                         # (S,)
+    off = pos % page_size
+    ppage = jnp.take_along_axis(
+        tables, jnp.broadcast_to(vpage[None], (b, s)), axis=1)  # (B,S)
+    valid = pos[None, :] < lens[:, None]             # (B,S)
+    safe_page = jnp.where(valid, ppage, 0)
+
+    def write(pool, new):
+        # pool (L,P,page,K,hd); new (L,B,S,K,hd)
+        flat_b = safe_page.reshape(-1)               # (B*S,)
+        flat_o = jnp.broadcast_to(off[None], (b, s)).reshape(-1)
+        upd = new.reshape(l, b * s, kh, hd).astype(pool.dtype)
+        # drop invalid writes by pointing them at a scratch page slot 0/0
+        # with where-masking the update against the existing value
+        cur = pool[:, flat_b, flat_o]
+        m = valid.reshape(1, b * s, 1, 1)
+        upd = jnp.where(m, upd, cur)
+        return pool.at[:, flat_b, flat_o].set(upd)
+
+    return {"k": write(pools["k"], ks), "v": write(pools["v"], vs)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size",
+                                             "use_pallas"))
+def decode_step_paged(params, pools, tables, lens, tokens, *,
+                      cfg: ModelConfig, page_size: int,
+                      use_pallas: bool = False):
+    """One decode step for the whole running batch.
+
+    tokens (B,1) int32 — last sampled token per row;
+    lens (B,) int32    — tokens already in cache (new token position);
+    tables (B, maxp)   — MMU block tables (row of -1s = inactive slot).
+    Returns (logits (B,V), new_pools).  Donate ``pools``.
+    """
+    b = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    x = layers.embed_lookup(params["embed"], tokens)
+    pos = lens                                        # 0-based new position
+    vpage = pos // page_size
+    off = pos % page_size
+    ppage = jnp.take_along_axis(tables, vpage[:, None], axis=1)[:, 0]
+    active = ppage >= 0
+    safe_page = jnp.where(active, ppage, 0)
+    rows = jnp.arange(b)
+
+    def body(x, inp):
+        lp, kp, vp = inp                              # pool (P,page,K,hd)
+        h = layers.norm_apply(lp["norm1"], x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(lp["attn"], cfg, h)
+        if cfg.pos_embed == "rope":
+            q = layers.apply_rope(q, pos[:, None], cfg.rope_theta)
+            k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
+        knew = k[:, 0].astype(kp.dtype)               # (B,K,hd)
+        vnew = v[:, 0].astype(vp.dtype)
+        mask = active[:, None, None]
+        kp = kp.at[safe_page, off].set(
+            jnp.where(mask, knew, kp[safe_page, off]))
+        vp = vp.at[safe_page, off].set(
+            jnp.where(mask, vnew, vp[safe_page, off]))
+        att = paged_decode(q[:, 0], kp, vp, tables,
+                           jnp.where(active, lens + 1, 0),
+                           use_pallas=use_pallas)
+        x = x + attention.out_proj(lp["attn"], cfg, att[:, None])
+        h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
+        if _is_moe_layer(cfg):
+            out, _ = moe.moe_apply(lp["ffn"], cfg, h)
+        else:
+            out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        return x + out, (kp, vp)
+
+    x, (ks, vs) = jax.lax.scan(body, x,
+                               (params["layers"], pools["k"], pools["v"]))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)[:, 0]
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,57 @@
+"""Sampling suite for the serving engine: greedy, temperature, top-k,
+top-p (nucleus), min-p — pure jnp, jit-friendly, PRNG-explicit."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0                # 0 => disabled
+    top_p: float = 1.0            # 1 => disabled
+    min_p: float = 0.0            # 0 => disabled
+
+
+def _apply_top_k(logits, k: int):
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    thresh = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def _apply_top_p(logits, p: float):
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep the smallest prefix with cumulative prob >= p (always >= 1 token)
+    cutoff_idx = jnp.sum(cum < p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    return jnp.where(logits < cutoff, -jnp.inf, logits)
+
+
+def _apply_min_p(logits, mp: float):
+    if mp <= 0.0:
+        return logits
+    probs = jax.nn.softmax(logits, axis=-1)
+    top = jnp.max(probs, axis=-1, keepdims=True)
+    return jnp.where(probs < mp * top, -jnp.inf, logits)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def sample(rng, logits, cfg: SamplerConfig = SamplerConfig()):
+    """logits (..., V) -> token ids (...,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    z = logits.astype(jnp.float32) / cfg.temperature
+    z = _apply_top_k(z, cfg.top_k)
+    z = _apply_top_p(z, cfg.top_p)
+    z = _apply_min_p(z, cfg.min_p)
+    return jax.random.categorical(rng, z, axis=-1).astype(jnp.int32)

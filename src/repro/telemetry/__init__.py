@@ -1,0 +1,2 @@
+from repro.telemetry import hlo_cost, roofline
+__all__ = ["hlo_cost", "roofline"]

@@ -1,0 +1,2 @@
+from repro.train.loop import SimulatedFailure, TrainConfig, Trainer
+__all__ = ["SimulatedFailure", "TrainConfig", "Trainer"]

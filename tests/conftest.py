@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: never set XLA_FLAGS device-count here — smoke
+tests and benches must see exactly 1 CPU device (the 512-device init lives
+only in repro.launch.dryrun)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

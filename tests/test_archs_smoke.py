@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Every assigned architecture instantiates its REDUCED config and runs one
+forward/train step plus a prefill->decode step on CPU, asserting output
+shapes and finiteness.  The FULL configs are exercised compile-only by the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCHS, get_config, shape_applicable
+from repro.models import transformer as T
+
+ARCH_IDS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def _batch(cfg, key, b=2, s=16):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.n_encoder_layers:
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_loss(arch_id, key):
+    cfg = get_config(arch_id).reduced()
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    batch = _batch(cfg, key)
+    loss, metrics = T.loss_fn(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch_id}: non-finite loss"
+    assert float(metrics["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_updates_params(arch_id, key):
+    from repro.optim import adamw
+    cfg = get_config(arch_id).reduced()
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    opt = adamw.init(params)
+    batch = _batch(cfg, key)
+
+    def loss(p):
+        return T.loss_fn(p, cfg, batch)[0]
+
+    grads = jax.grad(loss)(params)
+    new_params, new_opt, m = adamw.update(grads, opt, params,
+                                          adamw.AdamWConfig())
+    # at least one leaf moved, no NaNs anywhere
+    moved = any(bool(jnp.any(a != b))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_params)))
+    assert moved, f"{arch_id}: optimizer step was a no-op"
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert int(new_opt["step"]) == 1
+    assert float(m["grad_norm"]) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_decode(arch_id, key):
+    cfg = get_config(arch_id).reduced()
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    b, s = 2, 12
+    batch = _batch(cfg, key, b, s)
+    logits, cache = T.prefill(params, cfg, batch["tokens"], max_len=s + 8,
+                              encoder_frames=batch.get("frames"),
+                              cache_dtype=jnp.float32)
+    assert logits.shape == (b, cfg.padded_vocab)
+    pos = jnp.full((b,), s, jnp.int32)
+    nt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache = T.decode_step(params, cfg, cache, nt, pos)
+    assert logits2.shape == (b, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{arch_id}: decode NaN"
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_matches_forward(arch_id, key):
+    """Teacher-forced decode must reproduce full-forward logits."""
+    cfg = get_config(arch_id).reduced()
+    params = T.init_params(key, cfg, dtype=jnp.float32)
+    b, s = 1, 10
+    batch = _batch(cfg, key, b, s)
+    hidden, _, _, _ = T.forward(params, cfg, batch["tokens"],
+                                encoder_frames=batch.get("frames"))
+    full_logits = T.lm_logits(params, cfg, hidden)     # (B,S,V)
+
+    prefix = 6
+    logits_p, cache = T.prefill(params, cfg, batch["tokens"][:, :prefix],
+                                max_len=s + 2,
+                                encoder_frames=batch.get("frames"),
+                                cache_dtype=jnp.float32)
+    # prefill last-token logits == forward at position prefix-1
+    assert jnp.allclose(logits_p, full_logits[:, prefix - 1],
+                        atol=2e-3), f"{arch_id}: prefill mismatch"
+    # teacher-forced decode of the rest
+    for t in range(prefix, s):
+        pos = jnp.full((b,), t, jnp.int32)
+        logits_d, cache = T.decode_step(params, cfg, cache,
+                                        batch["tokens"][:, t:t + 1], pos)
+        assert jnp.allclose(logits_d, full_logits[:, t], atol=2e-3), \
+            f"{arch_id}: decode@{t} mismatch " \
+            f"{float(jnp.max(jnp.abs(logits_d - full_logits[:, t])))}"
+
+
+def test_param_count_sanity():
+    """Analytic n_params matches actual initialized leaves (full config is
+    analytic-only; reduced configs are materialized and compared)."""
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id).reduced()
+        params = T.init_params(jax.random.PRNGKey(0), cfg,
+                               dtype=jnp.float32)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        expect = cfg.n_params()
+        # zamba2's shared block is counted once per pattern in the analytic
+        # formula but stored once: allow family-level slack
+        tol = 0.30 if cfg.family == "hybrid" else 0.02
+        assert abs(actual - expect) / expect < tol, \
+            f"{arch_id}: analytic {expect} vs actual {actual}"
+
+
+def test_assignment_cells_accounted():
+    """40 cells: each is either applicable or documented-skipped."""
+    cells = [(c.arch_id, s.name, ok)
+             for c, s, ok, _ in __import__("repro.configs",
+                                           fromlist=["all_cells"]).all_cells()]
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok in cells if not ok]
+    # exactly the 7 pure full-attention archs skip long_500k
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)

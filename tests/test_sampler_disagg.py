@@ -1,0 +1,84 @@
+"""Sampler suite + prefill/decode disaggregation hand-off."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampler import SamplerConfig, sample
+
+
+def test_greedy_matches_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 100))
+    out = sample(jax.random.PRNGKey(1), logits, SamplerConfig())
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.argmax(np.asarray(logits), -1))
+
+
+def test_top_k_restricts_support():
+    logits = jnp.asarray(np.random.RandomState(0).randn(2000, 50))
+    cfg = SamplerConfig(temperature=1.0, top_k=3)
+    toks = np.asarray(sample(jax.random.PRNGKey(2), logits, cfg))
+    top3 = np.argsort(np.asarray(logits), -1)[:, -3:]
+    assert all(t in row for t, row in zip(toks, top3))
+
+
+def test_top_p_keeps_at_least_one_and_restricts():
+    # peaked distribution: nucleus p=0.5 must keep only the top token
+    logits = jnp.asarray([[10.0, 0.0, 0.0, 0.0]] * 200)
+    cfg = SamplerConfig(temperature=1.0, top_p=0.5)
+    toks = np.asarray(sample(jax.random.PRNGKey(3), logits, cfg))
+    assert (toks == 0).all()
+
+
+def test_min_p_filters_tail():
+    logits = jnp.asarray([[5.0, 4.9, -10.0, -10.0]] * 500)
+    cfg = SamplerConfig(temperature=1.0, min_p=0.5)
+    toks = np.asarray(sample(jax.random.PRNGKey(4), logits, cfg))
+    assert set(np.unique(toks)) <= {0, 1}
+
+
+def test_temperature_spreads():
+    logits = jnp.asarray([[2.0, 1.5, 1.0, 0.5]] * 2000)
+    cold = np.asarray(sample(jax.random.PRNGKey(5), logits,
+                             SamplerConfig(temperature=0.1)))
+    hot = np.asarray(sample(jax.random.PRNGKey(5), logits,
+                            SamplerConfig(temperature=5.0)))
+    assert len(np.unique(cold)) <= len(np.unique(hot))
+
+
+DISAGG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P, AxisType
+    from repro.serve.disaggregated import make_handoff_fn, handoff_wire_bytes
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+    handoff, qp = make_handoff_fn(mesh)
+    # dim0 pod-sharded: rows 0-1 = prefill pod KV, rows 2-3 = decode pool
+    cache = {"k": jnp.arange(4 * 6, dtype=jnp.float32).reshape(4, 6),
+             "v": -jnp.arange(4 * 6, dtype=jnp.float32).reshape(4, 6)}
+    with mesh:
+        dev = jax.device_put(cache, jax.tree.map(
+            lambda _: jax.NamedSharding(mesh, P("pod")), cache))
+        out = jax.jit(handoff)(dev)
+    k = np.asarray(out["k"])
+    np.testing.assert_array_equal(k[2:], np.asarray(cache["k"])[:2])  # delivered
+    np.testing.assert_array_equal(k[:2], np.asarray(cache["k"])[:2])  # kept
+    assert handoff_wire_bytes(cache) == sum(
+        x.nbytes for x in cache.values()) / 2
+    print("DISAGG_OK")
+""")
+
+
+def test_disaggregated_handoff_multidev():
+    r = subprocess.run([sys.executable, "-c", DISAGG], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "DISAGG_OK" in r.stdout, f"\n{r.stdout}\n{r.stderr[-2000:]}"

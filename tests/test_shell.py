@@ -1,0 +1,229 @@
+"""Shell behaviour: three-layer lifecycle, reconfiguration contracts,
+credits/fairness invariants, MMU paging, sniffer, interrupts."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import (make_aes_artifact, make_hll_artifact,
+                        make_passthrough_artifact)
+from repro.core import (Alloc, AppArtifact, Oper, SgEntry, Shell,
+                        ShellConfig)
+from repro.core.credits import (CreditAccount, Link, RRArbiter,
+                                jains_index, packetize)
+from repro.core.services import (AESConfig, MMU, MMUConfig, PageFaultError,
+                                 SnifferConfig, TLB, ServiceRequirement)
+from repro.core.services.sniffer import CSR_SNIFFER_ENABLE
+
+
+def _shell(**kw):
+    services = kw.pop("services", {"mmu": MMUConfig(page_size=64,
+                                                    n_pages=64),
+                                   "encryption": AESConfig()})
+    s = Shell(ShellConfig.make(services=services, **kw))
+    s.build()
+    return s
+
+
+# ============================================================== lifecycle ===
+def test_build_and_load():
+    shell = _shell(n_vfpgas=2)
+    assert shell.services.names() == ["encryption", "mmu"]
+    stats = shell.load_app(0, make_passthrough_artifact())
+    assert shell.vfpgas[0].app.name == "passthrough"
+    assert shell.vfpgas[1].app is None            # other slot untouched
+
+
+def test_app_requirements_fail_safe():
+    shell = _shell(services={"encryption": AESConfig()})
+    art = make_hll_artifact()                      # requires mmu
+    from repro.core.vfpga import LinkError
+    with pytest.raises(LinkError):
+        shell.load_app(0, art)
+
+
+def test_shell_reconfig_refuses_to_strand_app():
+    shell = _shell()
+    shell.load_app(0, make_aes_artifact("ecb"))    # requires encryption
+    bad = ShellConfig.make(services={"mmu": MMUConfig()})
+    with pytest.raises(RuntimeError, match="strand"):
+        shell.reconfigure_shell(bad)
+    # original services intact after the refused swap
+    assert "encryption" in shell.services.names()
+
+
+def test_app_hot_swap_preserves_neighbors():
+    shell = _shell(n_vfpgas=2)
+    shell.load_app(0, make_aes_artifact("ecb"))
+    shell.load_app(1, make_passthrough_artifact())
+    gen0 = shell.services.get("mmu").generation
+    shell.reconfigure_app(1, make_hll_artifact())
+    assert shell.vfpgas[0].app.name == "aes_ecb"
+    assert shell.vfpgas[1].app.name == "hll"
+    assert shell.services.get("mmu").generation == gen0  # services untouched
+
+
+def test_cold_restart_reloads_apps():
+    shell = _shell()
+    shell.load_app(0, make_passthrough_artifact())
+    r = shell.cold_restart()
+    assert r["total_s"] > 0
+    assert shell.vfpgas[0].app.name == "passthrough"
+
+
+def test_hbm_budget_enforced():
+    import jax.numpy as jnp
+    shell = _shell()
+    shell.vfpgas[0].hbm_budget = 64
+    art = AppArtifact(name="fat", fn=lambda i, v, x: x,
+                      weights={"w": jnp.zeros((1024,), jnp.float32)})
+    from repro.core.vfpga import LinkError
+    with pytest.raises(LinkError, match="budget"):
+        shell.load_app(0, art)
+
+
+# ============================================================= datapath ====
+def test_cthread_transfer_roundtrip():
+    shell = _shell()
+    shell.load_app(0, make_passthrough_artifact())
+    ct = shell.attach_thread(0, pid=1)
+    src = ct.getMem((Alloc.HPF, 8192))
+    src[:] = np.arange(8192) % 251
+    dst = ct.getMem((Alloc.REG, 8192))
+    comp = ct.invoke(Oper.LOCAL_TRANSFER,
+                     SgEntry(src=ct.vaddr_of(src), dst=ct.vaddr_of(dst),
+                             length=8192))
+    assert comp.ok
+    assert (src == dst).all()
+    assert shell.vfpgas[0].iface.cq_read.writeback_counter >= 1
+
+
+def test_app_fault_raises_interrupt_not_crash():
+    shell = _shell()
+
+    def bad_app(iface, vfpga, x):
+        raise ValueError("malformed data")
+    shell.load_app(0, AppArtifact(name="bad", fn=bad_app))
+    ct = shell.attach_thread(0, pid=1)
+    buf = ct.getMem((Alloc.REG, 64))
+    comp = ct.invoke(Oper.LOCAL_TRANSFER,
+                     SgEntry(src=ct.vaddr_of(buf), length=64))
+    assert not comp.ok
+    irq = ct.poll_interrupt(timeout=1.0)
+    assert irq is not None                       # IRQ_USER was raised
+
+
+def test_sniffer_capture_and_csr_control():
+    shell = _shell(services={"encryption": AESConfig(),
+                             "mmu": MMUConfig(),
+                             "sniffer": SnifferConfig()})
+    shell.load_app(0, make_passthrough_artifact())
+    sniffer = shell.services.get("sniffer")
+    sniffer.csr.set_csr(1, CSR_SNIFFER_ENABLE)
+    ct = shell.attach_thread(0, pid=1)
+    buf = ct.getMem((Alloc.REG, 16384))
+    ct.invoke(Oper.LOCAL_TRANSFER,
+              SgEntry(src=ct.vaddr_of(buf), length=16384))
+    recs = sniffer.to_records()
+    assert len(recs) == 4                        # 16KB / 4KB packets
+    assert all(r["len"] == 4096 for r in recs)
+    sniffer.csr.set_csr(0, CSR_SNIFFER_ENABLE)   # stop
+    n = len(sniffer.to_records())
+    ct.invoke(Oper.LOCAL_TRANSFER,
+              SgEntry(src=ct.vaddr_of(buf), length=4096))
+    assert len(sniffer.to_records()) == n        # capture stopped
+
+
+# ======================================================== credits/fairness ==
+def test_packetize_exact():
+    assert packetize(0) == []
+    assert packetize(4096) == [4096]
+    assert packetize(10000) == [4096, 4096, 1808]
+    assert sum(packetize(123456, 1000)) == 123456
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(1, 200_000), min_size=2, max_size=6))
+def test_rr_arbiter_fairness_property(sizes):
+    """Property: equal-demand tenants get equal shares (Jain -> 1); the
+    link moves every byte exactly once; per-tenant ordering holds."""
+    link = Link("l", 1e9)
+    arb = RRArbiter(link, packet_bytes=4096)
+    total = max(sizes)
+    for i in range(len(sizes)):
+        arb.submit(f"t{i}", total)               # equal demand
+    arb.drain()
+    shares = arb.fairness()
+    assert abs(jains_index(shares) - 1.0) < 1e-9
+    assert link.bytes_moved == total * len(sizes)
+
+
+def test_credit_backpressure_contained():
+    """A stalled consumer exhausts ITS credits; the account stalls the
+    requester, not the link."""
+    acct = CreditAccount(4)
+    assert all(acct.try_acquire() for _ in range(4))
+    assert not acct.try_acquire()                # 5th stalls
+    assert acct.stalls == 1
+    acct.release(2)
+    assert acct.try_acquire() and acct.try_acquire()
+    assert not acct.try_acquire()
+
+
+# ================================================================== MMU =====
+def test_mmu_paging_and_translation():
+    mmu = MMU(MMUConfig(page_size=16, n_pages=8, host_pool_pages=8))
+    mmu.alloc_seq(1, 40)                         # 3 pages
+    p, off = mmu.translate(1, 39)
+    assert off == 39 % 16
+    table = mmu.block_table([1], 4)
+    assert (table[0, :3] >= 0).all() and table[0, 3] == -1
+    mmu.free_seq(1)
+    assert mmu.utilization()["pages_used"] == 0
+
+
+def test_mmu_eviction_and_fault_in():
+    mmu = MMU(MMUConfig(page_size=16, n_pages=4, host_pool_pages=8))
+    mmu.alloc_seq(1, 48)                         # 3 pages
+    mmu.alloc_seq(2, 32)                         # needs 2 -> evicts from 1
+    assert mmu.migrations_out >= 1
+    # touching the evicted page faults it back in
+    p, _ = mmu.translate(1, 47)
+    assert p >= 0
+    assert mmu.migrations_in >= 1
+
+
+def test_mmu_pool_exhaustion_raises():
+    mmu = MMU(MMUConfig(page_size=16, n_pages=2, host_pool_pages=0))
+    mmu.alloc_seq(1, 32)
+    with pytest.raises(PageFaultError):
+        mmu.alloc_seq(2, 32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(accesses=st.lists(st.integers(0, 1023), min_size=5, max_size=60),
+       entries=st.sampled_from([4, 8, 16]),
+       assoc=st.sampled_from([1, 2, 4]))
+def test_tlb_never_wrong_property(accesses, entries, assoc):
+    """Property: the TLB may miss but never returns a stale/wrong page."""
+    mmu = MMU(MMUConfig(page_size=16, n_pages=128, tlb_entries=entries,
+                        tlb_assoc=assoc))
+    mmu.alloc_seq(7, 1024)
+    truth = {}
+    for pos in accesses:
+        p, off = mmu.translate(7, pos)
+        vp = pos // 16
+        if vp in truth:
+            assert truth[vp] == p, "translation changed without remap"
+        truth[vp] = p
+        assert off == pos % 16
+
+
+def test_mmu_reconfigure_requires_drain():
+    mmu = MMU(MMUConfig(page_size=16, n_pages=8))
+    mmu.alloc_seq(1, 16)
+    with pytest.raises(RuntimeError, match="drain"):
+        mmu.configure(MMUConfig(page_size=1024, n_pages=8))
+    mmu.free_seq(1)
+    mmu.configure(MMUConfig(page_size=1024, n_pages=8))
+    assert mmu.config.page_size == 1024
+    assert mmu.generation == 1
