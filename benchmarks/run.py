@@ -22,6 +22,8 @@ SUITES = [
      "Table 3: shell reconfiguration latency"),
     ("fig8_multitenant", "bench_multitenant",
      "Fig 8: multi-tenant AES ECB fair sharing"),
+    ("scheduler_qos", "bench_scheduler",
+     "Scheduler QoS: weighted shares under saturation"),
     ("fig10_cthreads", "bench_cthreads",
      "Fig 10: AES CBC cThread scaling"),
     ("fig11_hll", "bench_hll",

@@ -49,7 +49,8 @@ class _EngineHolder:
                 raise RuntimeError("lm_serving requires the mmu service")
             self._engines[slot] = ServingEngine(
                 self.cfg, self.params, mmu, max_batch=self.max_batch,
-                max_len=self.max_len)
+                max_len=self.max_len, shell=vfpga.shell, slot=slot,
+                tenant=vfpga.tenant)
         return self._engines[slot]
 
     def __call__(self, iface, vfpga, prompt) -> List[int]:

@@ -1,0 +1,60 @@
+"""JAX version-drift shims, centralized.
+
+Two drifts bite this repo on older/newer JAX installs:
+
+  * ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) only exist on newer JAX.  :func:`make_mesh` passes
+    ``axis_types`` through when the install supports it and silently omits
+    it otherwise — Auto is the default axis type anyway, so behaviour is
+    identical where it matters.
+  * ``Compiled.cost_analysis()`` returns a dict on some versions and a
+    one-element *list* of dicts on others.  :func:`normalize_cost_analysis`
+    flattens both shapes to a plain dict so call sites can ``.get()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+
+try:  # newer JAX
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPES = True
+except ImportError:  # older JAX: every mesh axis is implicitly Auto
+    AxisType = None
+    HAS_AXIS_TYPES = False
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` where supported, else None (omit kwarg)."""
+    if not HAS_AXIS_TYPES:
+        return None
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types=None):
+    """``jax.make_mesh`` that tolerates installs without ``axis_types``."""
+    kw: Dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if HAS_AXIS_TYPES and axis_types is not None:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+def normalize_cost_analysis(ca: Any) -> Dict[str, float]:
+    """Flatten ``Compiled.cost_analysis()`` output to one dict.
+
+    Handles: dict (new), [dict] per-device list (old), None/[] (no data).
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        for item in ca:
+            if isinstance(item, dict):
+                return item
+        return {}
+    if isinstance(ca, dict):
+        return ca
+    return {}

@@ -6,12 +6,13 @@ sharing, run-time reconfiguration, and a unified multi-stream interface.
 """
 from repro.core.cthread import Alloc, CThread
 from repro.core.interfaces import (AppInterface, Completion, Oper, SgEntry)
+from repro.core.scheduler import ShellScheduler, Tenant
 from repro.core.shell import BuildReport, Shell, ShellConfig
 from repro.core.static_layer import StaticLayer, TransferEngine
 from repro.core.vfpga import AppArtifact, VFpga
 
 __all__ = [
     "Alloc", "CThread", "AppInterface", "Completion", "Oper", "SgEntry",
-    "BuildReport", "Shell", "ShellConfig", "StaticLayer", "TransferEngine",
-    "AppArtifact", "VFpga",
+    "BuildReport", "Shell", "ShellConfig", "ShellScheduler", "StaticLayer",
+    "Tenant", "TransferEngine", "AppArtifact", "VFpga",
 ]

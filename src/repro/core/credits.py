@@ -168,6 +168,10 @@ class RRArbiter:
     def pending(self) -> bool:
         return any(q for q in self._queues.values())
 
+    def backlogged(self, requester: str) -> bool:
+        """True while the requester has queued (unsent) packets."""
+        return bool(self._queues.get(requester))
+
     def step(self) -> bool:
         """Move one packet from the next non-empty requester.  False if
         nothing is pending."""
@@ -203,6 +207,76 @@ class RRArbiter:
         return {k: v / total for k, v in self.delivered.items()}
 
 
+class WeightedRRArbiter(RRArbiter):
+    """Deficit-weighted round robin (DWRR) over requesters.
+
+    Each requester carries a weight; every visit grants it a byte quantum
+    of ``weight * packet_bytes`` and it sends while its deficit covers the
+    head packet.  Equal weights degenerate to plain RR (one packet per
+    visit at uniform packet size), so all RRArbiter invariants — per
+    requester FIFO ordering, every byte moved exactly once — carry over.
+    Idle requesters forfeit their deficit: no banking bandwidth while
+    the queue is empty (standard DWRR)."""
+
+    def __init__(self, link: Link, packet_bytes: int = DEFAULT_PACKET_BYTES,
+                 default_weight: float = 1.0):
+        super().__init__(link, packet_bytes=packet_bytes)
+        self.default_weight = default_weight
+        self._weights: Dict[str, float] = {}
+        self._deficit: Dict[str, float] = {}
+
+    def set_weight(self, requester: str, weight: float) -> None:
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        self._weights[requester] = weight
+
+    def weight(self, requester: str) -> float:
+        return self._weights.get(requester, self.default_weight)
+
+    def submit(self, requester: str, nbytes: int, *, tag: str = "",
+               weight: Optional[float] = None,
+               on_done: Optional[Callable[[float], None]] = None) -> None:
+        if weight is not None:
+            self.set_weight(requester, weight)
+        super().submit(requester, nbytes, tag=tag, on_done=on_done)
+
+    def step(self) -> bool:
+        if not self.pending():
+            return False
+        n = len(self._order)
+        while True:
+            name = self._order[self._rr % n]
+            q = self._queues[name]
+            if not q:
+                self._deficit[name] = 0.0      # idle: forfeit deficit
+                self._rr += 1
+                continue
+            req = q[0]
+            pkt_len = req.packets[0]
+            d = self._deficit.get(name, 0.0)
+            if d < pkt_len:
+                # grant this round's quantum and move on; weight > 0
+                # guarantees the deficit eventually covers the packet.
+                self._deficit[name] = d + self.weight(name) * self.packet_bytes
+                self._rr += 1
+                continue
+            pkt = req.packets.popleft()
+            self._deficit[name] = d - pkt
+            t, _ = self.link.transfer(pkt, src=name, dst="link",
+                                      tag=req.tag)
+            req.bytes_done += pkt
+            self.delivered[name] += pkt
+            if not req.packets:
+                q.popleft()
+                req.t_done = t
+                self.completions.append((name, t, req.bytes_total))
+                if req.on_done is not None:
+                    req.on_done(t)
+            # NOTE: _rr not advanced — the requester keeps the link while
+            # its deficit covers the next packet (its weighted burst).
+            return True
+
+
 def jains_index(shares: Dict[str, float]) -> float:
     """Jain's fairness index: 1.0 = perfectly fair."""
     vals = list(shares.values())
@@ -211,3 +285,13 @@ def jains_index(shares: Dict[str, float]) -> float:
     s = sum(vals)
     s2 = sum(v * v for v in vals)
     return (s * s) / (len(vals) * s2) if s2 else 1.0
+
+
+def weighted_jains_index(shares: Dict[str, float],
+                         weights: Dict[str, float]) -> float:
+    """Jain's index over weight-normalized shares: 1.0 means every party
+    received bandwidth exactly proportional to its configured weight."""
+    wtot = sum(weights.get(k, 1.0) for k in shares) or 1.0
+    norm = {k: v / (weights.get(k, 1.0) / wtot)
+            for k, v in shares.items()}
+    return jains_index(norm)

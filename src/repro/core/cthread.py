@@ -88,8 +88,10 @@ class CThread:
               else self.vfpga.iface.sq_read)
         ticket = sq.submit(sg)
         self._pending[ticket] = time.perf_counter()
-        # In the full shell the arbiter drains send queues; standalone
-        # slots execute inline (still through the credit-checked path).
+        # In the full shell, kick hands the entry to the async scheduler
+        # (batching + weighted credits + arbiter on its own thread) and the
+        # completion queue provides synchronization; standalone slots
+        # execute inline.
         shell = getattr(self.vfpga, "shell", None)
         if shell is not None:
             shell.kick(self.vfpga.slot)

@@ -1,0 +1,487 @@
+"""Multi-tenant shell scheduler: async submission + weighted-credit QoS.
+
+Replaces the synchronous per-slot ``Shell.kick()`` drain loop with an
+event-driven subsystem in front of the link arbiter:
+
+  * **Async intake** — cThreads on any vFPGA slot enqueue scatter-gather
+    work concurrently; a single scheduler thread (the "shell datapath
+    clock") ingests, batches, and issues it.  Callers synchronize on the
+    completion queues exactly as before.
+  * **Coalescing** — consecutive small SG entries on the same
+    (slot, stream) are merged into one packet-sized batch before hitting
+    the arbiter, so tiny descriptors stop costing a full arbiter visit
+    each.  Batches never span streams and never reorder entries: each
+    (slot, stream) is a FIFO end to end.
+  * **Weighted credits** — every tenant owns a credit account sized by its
+    weight; batches acquire one credit per packet before entering the
+    arbiter and release on completion, so an over-subscribed tenant stalls
+    itself, never the link (back-pressure containment, paper §7.2).
+  * **Weighted bandwidth** — the :class:`~repro.core.credits.WeightedRRArbiter`
+    serves each (slot, stream) queue with its tenant's weight, split evenly
+    across the tenant's active queues so a tenant's share is set by its
+    weight, not its stream count.
+  * **Per-tenant QoS stats** — byte shares, weighted/unweighted Jain's
+    fairness, mean submit→complete latency, and throughput, surfaced
+    through ``Shell.status()["scheduler"]``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
+
+from repro.core import credits as C
+from repro.core.interfaces import Completion, SgEntry
+
+DEFAULT_TENANT_PREFIX = "tenant"
+
+
+@dataclass
+class Tenant:
+    """One bandwidth principal: a weight, a credit account, QoS counters."""
+    name: str
+    weight: float = 1.0
+    credits: C.CreditAccount = None          # set by the scheduler
+    submissions: int = 0
+    completions: int = 0
+    pending: int = 0                         # accepted, not yet completed
+    intake_stalls: int = 0                   # submitter back-pressure events
+    batches: int = 0
+    bytes_done: int = 0
+    lat_sum_s: float = 0.0
+    t_first_submit: float = 0.0
+    t_last_done: float = 0.0
+
+    def stats(self) -> Dict[str, float]:
+        span = max(self.t_last_done - self.t_first_submit, 1e-12)
+        return {
+            "weight": self.weight,
+            "submissions": self.submissions,
+            "completions": self.completions,
+            "batches": self.batches,
+            "bytes": self.bytes_done,
+            "mean_latency_s": self.lat_sum_s / max(self.completions, 1),
+            "throughput_bps": self.bytes_done / span if self.bytes_done
+            else 0.0,
+            "credit_capacity": self.credits.capacity if self.credits else 0,
+            "credit_stalls": self.credits.stalls if self.credits else 0,
+            "intake_stalls": self.intake_stalls,
+        }
+
+
+@dataclass
+class _Submission:
+    slot: int
+    stream: int
+    ticket: int
+    sg: SgEntry
+    tenant: Tenant
+    nbytes: int
+    t_submit: float
+    execute: Optional[Callable[[int, SgEntry], Completion]] = None
+    complete: Optional[Callable[[Completion], None]] = None
+    done_event: Optional[threading.Event] = None
+
+
+@dataclass
+class _Batch:
+    tenant: Tenant
+    requester: str
+    subs: List[_Submission]
+    nbytes: int
+    npkts: int
+
+
+class ShellScheduler:
+    """Event-driven multi-tenant scheduler in front of a weighted arbiter."""
+
+    def __init__(self, arbiter: C.WeightedRRArbiter, *,
+                 packet_bytes: int = C.DEFAULT_PACKET_BYTES,
+                 stream_depth: int = 64,
+                 coalesce: bool = True,
+                 max_batch_entries: int = 16,
+                 max_pending_per_tenant: Optional[int] = None):
+        self.arbiter = arbiter
+        self.packet_bytes = packet_bytes
+        self.stream_depth = stream_depth
+        self.coalesce = coalesce
+        self.max_batch_entries = max_batch_entries
+        # submitter-side back-pressure bound (paper §7.2: an over-subscribed
+        # tenant stalls ITSELF): submissions beyond this block the caller
+        # until completions free room.  pause() exempts itself — it exists
+        # precisely to build up saturation backlogs deterministically.
+        self.max_pending_per_tenant = (max_pending_per_tenant
+                                       if max_pending_per_tenant is not None
+                                       else 64 * stream_depth)
+
+        self._tenants: Dict[str, Tenant] = {}
+        self._slot_tenant: Dict[int, str] = {}
+        # requester name -> tenant, for weight rebalancing across a
+        # tenant's active (slot, stream) queues
+        self._tenant_requesters: Dict[str, Set[str]] = {}
+
+        self._intake: Deque[_Submission] = deque()
+        self._pend: Dict[Tuple[int, int], Deque[_Submission]] = {}
+        self._pend_order: List[Tuple[int, int]] = []
+
+        self._lock = threading.Lock()
+        self._work_cv = threading.Condition(self._lock)
+        self._idle_cv = threading.Condition(self._lock)
+        self._inflight = 0
+        self._paused = False
+        self._stop = False
+        self._worker: Optional[threading.Thread] = None
+
+        self.batches_issued = 0
+        self.entries_coalesced = 0          # entries that rode in a batch >1
+
+    # ------------------------------------------------------------ tenants --
+    def register_tenant(self, name: str, weight: float = 1.0) -> Tenant:
+        """Create/update a tenant.  Credit capacity scales with weight so a
+        heavier tenant may keep proportionally more packets in flight."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        with self._lock:
+            t = self._tenants.get(name)
+            if t is None:
+                t = Tenant(name=name, weight=weight)
+                t.credits = C.CreditAccount(
+                    max(1, int(round(self.stream_depth * weight))))
+                self._tenants[name] = t
+                self._tenant_requesters.setdefault(name, set())
+            elif t.weight != weight:
+                t.weight = weight
+                t.credits = C.CreditAccount(
+                    max(1, int(round(self.stream_depth * weight))))
+                self._rebalance_weights(name)
+        return t
+
+    def bind_slot(self, slot: int, tenant: str) -> None:
+        """Route all submissions from a vFPGA slot to the named tenant."""
+        if tenant not in self._tenants:
+            self.register_tenant(tenant)
+        with self._lock:
+            self._slot_tenant[slot] = tenant
+
+    def tenant_of(self, slot: int) -> Tenant:
+        with self._lock:
+            name = self._slot_tenant.get(slot)
+        if name is None:
+            name = f"{DEFAULT_TENANT_PREFIX}{slot}"
+            self._tenant_by_name(name)
+            self.bind_slot(slot, name)
+        return self._tenants[name]
+
+    def _tenant_by_name(self, name: str) -> Tenant:
+        """Get-or-create WITHOUT touching an existing tenant's weight
+        (register_tenant with the default weight would reset it)."""
+        with self._lock:
+            t = self._tenants.get(name)
+        if t is not None:
+            return t
+        return self.register_tenant(name)
+
+    def tenants(self) -> Dict[str, Tenant]:
+        with self._lock:
+            return dict(self._tenants)
+
+    def _rebalance_weights(self, tenant_name: str,
+                           extra: Optional[str] = None) -> None:
+        """Split a tenant's weight evenly over its BACKLOGGED requesters so
+        its link share tracks its weight regardless of how many
+        (slot, stream) queues it currently fans out on.  Requesters whose
+        arbiter queue has drained stop diluting the share (they are
+        re-included by the rebalance accompanying their next batch).
+        Caller must hold self._lock."""
+        t = self._tenants[tenant_name]
+        reqs = self._tenant_requesters.get(tenant_name, set())
+        active = {r for r in reqs if self.arbiter.backlogged(r)}
+        if extra is not None:
+            active.add(extra)
+        if not active:
+            return
+        per = t.weight / len(active)
+        for r in active:
+            self.arbiter.set_weight(r, per)
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, *, slot: int, stream: int, ticket: int, sg: SgEntry,
+               execute: Callable[[int, SgEntry], Completion],
+               complete: Callable[[Completion], None],
+               tenant: Optional[str] = None) -> None:
+        """Enqueue one SG descriptor (any thread; blocks only when the
+        tenant exceeds its pending bound — submitter-side back-pressure)."""
+        ten = (self._tenant_by_name(tenant) if tenant is not None
+               else self.tenant_of(slot))
+        sub = _Submission(slot=slot, stream=stream, ticket=ticket, sg=sg,
+                          tenant=ten, nbytes=max(sg.length, 1),
+                          t_submit=time.perf_counter(),
+                          execute=execute, complete=complete)
+        self._enqueue(sub)
+
+    def submit_io(self, nbytes: int, *, slot: int = 0, stream: int = 0,
+                  tenant: Optional[str] = None, tag: str = "io",
+                  wait: bool = False,
+                  timeout: Optional[float] = None) -> threading.Event:
+        """Enqueue a raw transfer with no SG execution behind it — the path
+        the serving engine uses to push its decode-step I/O through the
+        shared link under this tenant's QoS weight."""
+        ten = (self._tenant_by_name(tenant) if tenant is not None
+               else self.tenant_of(slot))
+        if (self._worker is not None
+                and threading.current_thread() is self._worker):
+            # Re-entrant submission from inside an executing batch (e.g. a
+            # serving app's decode loop running under execute_sg): waiting
+            # on our own thread would deadlock, so bill the link and the
+            # tenant inline.  Bytes still land in the arbiter's delivered
+            # table so tenant totals and arbiter totals stay reconciled.
+            t_sub = time.perf_counter()
+            requester = f"{ten.name}/vfpga{slot}.s{stream}:inline"
+            with self._lock:
+                if ten.t_first_submit == 0.0:
+                    ten.t_first_submit = t_sub
+                ten.submissions += 1
+            self.arbiter.link.transfer(max(nbytes, 1), src=requester,
+                                       tag=tag)
+            self.arbiter.delivered[requester] = (
+                self.arbiter.delivered.get(requester, 0) + max(nbytes, 1))
+            now = time.perf_counter()
+            ten.completions += 1
+            ten.bytes_done += max(nbytes, 1)
+            ten.lat_sum_s += now - t_sub
+            ten.t_last_done = now
+            ev = threading.Event()
+            ev.set()
+            return ev
+        sg = SgEntry(length=max(nbytes, 1), src_stream=stream,
+                     meta={"tag": tag})
+        sub = _Submission(slot=slot, stream=stream, ticket=-1, sg=sg,
+                          tenant=ten, nbytes=max(nbytes, 1),
+                          t_submit=time.perf_counter(),
+                          done_event=threading.Event())
+        self._enqueue(sub)
+        if wait:
+            sub.done_event.wait(timeout=timeout)
+        return sub.done_event
+
+    def _enqueue(self, sub: _Submission) -> None:
+        on_worker = (self._worker is not None
+                     and threading.current_thread() is self._worker)
+        with self._lock:
+            # submitter-side back-pressure: an over-subscribed tenant
+            # stalls itself, never the link or other tenants.  Skipped
+            # while paused (pause() exists to build saturation backlogs)
+            # and on the worker thread (it is the one draining).
+            while (not self._paused and not on_worker
+                   and sub.tenant.pending >= self.max_pending_per_tenant):
+                sub.tenant.intake_stalls += 1
+                self._idle_cv.wait(timeout=0.25)
+            if sub.tenant.t_first_submit == 0.0:
+                sub.tenant.t_first_submit = sub.t_submit
+            sub.tenant.submissions += 1
+            sub.tenant.pending += 1
+            self._inflight += 1
+            self._intake.append(sub)
+            self._ensure_worker_locked()
+            self._work_cv.notify_all()
+
+    # ------------------------------------------------------- flow control --
+    def pause(self) -> None:
+        """Hold scheduling (submissions still accepted).  Lets callers build
+        up saturation demand before any byte moves — deterministic QoS
+        benchmarks depend on this."""
+        with self._lock:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._lock:
+            self._paused = False
+            self._work_cv.notify_all()
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every accepted submission has completed."""
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._lock:
+            if self._paused:
+                self._paused = False
+            self._ensure_worker_locked()
+            self._work_cv.notify_all()
+            while self._inflight > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._idle_cv.wait(timeout=remaining if remaining else 0.25)
+            return True
+
+    def close(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._work_cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=2.0)
+
+    # ------------------------------------------------------------- worker --
+    def _ensure_worker_locked(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._stop = False
+            self._worker = threading.Thread(
+                target=self._run, name="shell-scheduler", daemon=True)
+            self._worker.start()
+
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                while (not self._stop
+                       and (self._paused
+                            or (not self._intake and not self._has_ready()))):
+                    self._work_cv.wait(timeout=0.25)
+                if self._stop:
+                    return
+                intake = list(self._intake)
+                self._intake.clear()
+            self._ingest(intake)
+            # issue credit-gated batches, drive the arbiter, repeat: every
+            # completed batch returns credits that may unblock more work.
+            while True:
+                issued = self._issue_ready()
+                self.arbiter.drain()
+                if not issued and not self.arbiter.pending():
+                    with self._lock:
+                        if self._intake or self._paused or self._stop:
+                            break
+                        if not self._has_ready():
+                            self._idle_cv.notify_all()
+                            break
+                    # ready work exists but was credit-blocked with an idle
+                    # arbiter: impossible by construction (credits release
+                    # inside arbiter.drain()), but never spin.
+                    time.sleep(0.001)
+
+    def _has_ready(self) -> bool:
+        return any(self._pend.get(k) for k in self._pend_order)
+
+    def _ingest(self, subs: List[_Submission]) -> None:
+        for sub in subs:
+            key = (sub.slot, sub.stream)
+            if key not in self._pend:
+                self._pend[key] = deque()
+                self._pend_order.append(key)
+            self._pend[key].append(sub)
+
+    # ---------------------------------------------------------- batching ---
+    def _form_batch(self, q: Deque[_Submission]) -> _Batch:
+        """Pop a FIFO prefix of the stream queue: either one large entry or
+        several small ones coalesced up to one packet / max_batch_entries.
+        FIFO pop + single-requester submit = no same-stream reordering."""
+        head = q.popleft()
+        subs = [head]
+        nbytes = head.nbytes
+        if self.coalesce:
+            while (q and len(subs) < self.max_batch_entries
+                   and nbytes + q[0].nbytes <= self.packet_bytes):
+                nxt = q.popleft()
+                subs.append(nxt)
+                nbytes += nxt.nbytes
+        tenant = head.tenant
+        requester = f"{tenant.name}/vfpga{head.slot}.s{head.stream}"
+        npkts = max(len(C.packetize(nbytes, self.packet_bytes)), 1)
+        return _Batch(tenant=tenant, requester=requester, subs=subs,
+                      nbytes=nbytes, npkts=npkts)
+
+    def _issue_ready(self) -> int:
+        """Form batches from every stream queue head whose tenant has
+        credits; submit them to the weighted arbiter.  Credit-blocked
+        streams stay queued (head-of-line within the stream only)."""
+        issued = 0
+        for key in list(self._pend_order):
+            q = self._pend.get(key)
+            while q:
+                head = q[0]
+                ten = head.tenant
+                # probe the credit cost of the batch the head would form
+                # without popping: cost is bounded by capacity (a single
+                # over-sized transfer may otherwise deadlock).
+                probe_pkts = max(
+                    len(C.packetize(head.nbytes, self.packet_bytes)), 1)
+                cost = min(probe_pkts, ten.credits.capacity)
+                if not ten.credits.try_acquire(cost):
+                    break                      # tenant back-pressured
+                batch = self._form_batch(q)
+                # coalescing never changes the packet count (it only fills
+                # up to ONE packet, and over-packet heads ride alone), so
+                # the probed cost is the batch cost.
+                assert min(batch.npkts, ten.credits.capacity) == cost
+                self._submit_batch(batch, credit_cost=cost)
+                issued += 1
+        return issued
+
+    def _submit_batch(self, batch: _Batch, *, credit_cost: int) -> None:
+        tenant = batch.tenant
+        with self._lock:
+            reqs = self._tenant_requesters.setdefault(tenant.name, set())
+            reqs.add(batch.requester)
+            # rebalance over the currently-backlogged requesters (plus this
+            # one, about to be backlogged) so drained streams stop diluting
+            # the tenant's share.
+            self._rebalance_weights(tenant.name, extra=batch.requester)
+        self.batches_issued += 1
+        if len(batch.subs) > 1:
+            self.entries_coalesced += len(batch.subs)
+        tag = batch.subs[0].sg.opcode.value if batch.subs[0].ticket >= 0 \
+            else batch.subs[0].sg.meta.get("tag", "io")
+
+        def done(_t, batch=batch, credit_cost=credit_cost):
+            self._complete_batch(batch, credit_cost)
+
+        self.arbiter.submit(batch.requester, batch.nbytes, tag=tag,
+                            on_done=done)
+
+    def _complete_batch(self, batch: _Batch, credit_cost: int) -> None:
+        """Runs on the scheduler thread when the batch's last packet clears
+        the link: execute each SG in submission order, complete CQs,
+        release credits, update tenant QoS counters."""
+        now = time.perf_counter()
+        ten = batch.tenant
+        for sub in batch.subs:
+            if sub.execute is not None:
+                comp = sub.execute(sub.ticket, sub.sg)
+                if sub.complete is not None:
+                    sub.complete(comp)
+            if sub.done_event is not None:
+                sub.done_event.set()
+            ten.completions += 1
+            ten.lat_sum_s += now - sub.t_submit
+        ten.batches += 1
+        ten.bytes_done += batch.nbytes
+        ten.t_last_done = now
+        ten.credits.release(credit_cost)
+        with self._lock:
+            ten.pending -= len(batch.subs)
+            self._inflight -= len(batch.subs)
+            # wakes both drain() waiters and back-pressured submitters
+            self._idle_cv.notify_all()
+
+    # --------------------------------------------------------------- QoS ---
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            tenants = dict(self._tenants)
+        total = sum(t.bytes_done for t in tenants.values()) or 1
+        shares = {n: t.bytes_done / total for n, t in tenants.items()}
+        weights = {n: t.weight for n, t in tenants.items()}
+        per_tenant = {}
+        for n, t in tenants.items():
+            s = t.stats()
+            s["share"] = shares[n]
+            per_tenant[n] = s
+        return {
+            "tenants": per_tenant,
+            "jain_tenant": C.jains_index(shares),
+            "jain_weighted": C.weighted_jains_index(shares, weights),
+            "total_bytes": sum(t.bytes_done for t in tenants.values()),
+            "batches": self.batches_issued,
+            "entries_coalesced": self.entries_coalesced,
+        }

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import credits as C
 from repro.core.cthread import CThread
 from repro.core.interfaces import Oper
+from repro.core.scheduler import ShellScheduler, Tenant
 from repro.core.services.base import Service, ServiceRegistry
 from repro.core.services.collectives import CollectiveConfig, CollectiveService
 from repro.core.services.compression import CompressionConfig, GradCompression
@@ -86,9 +87,11 @@ class Shell:
         self.mesh = mesh
         self.services = ServiceRegistry()
         self.vfpgas: List[VFpga] = []
-        self.arbiter = C.RRArbiter(self.static.pcie,
-                                   packet_bytes=config.packet_bytes)
-        self._credits: Dict[Tuple[int, int], C.CreditAccount] = {}
+        self.arbiter = C.WeightedRRArbiter(self.static.pcie,
+                                           packet_bytes=config.packet_bytes)
+        self.scheduler = ShellScheduler(self.arbiter,
+                                        packet_bytes=config.packet_bytes,
+                                        stream_depth=config.stream_depth)
         self.built = False
 
     # ==================================================== build ("synthesis")
@@ -256,19 +259,30 @@ class Shell:
             self.build()
         return self.vfpgas[slot].load(artifact, self.services, self.mesh)
 
-    def attach_thread(self, slot: int, pid: int) -> CThread:
+    def attach_thread(self, slot: int, pid: int,
+                      tenant: Optional[str] = None) -> CThread:
+        if tenant is not None:
+            self.scheduler.bind_slot(slot, tenant)
         t = CThread(self.vfpgas[slot], pid)
         return t
 
-    # ================================================= datapath =============
-    def _credit(self, slot: int, stream: int) -> C.CreditAccount:
-        key = (slot, stream)
-        if key not in self._credits:
-            self._credits[key] = C.CreditAccount(self.config.stream_depth)
-        return self._credits[key]
+    # ================================================= tenants / QoS ========
+    def register_tenant(self, name: str, weight: float = 1.0,
+                        slots: Tuple[int, ...] = ()) -> Tenant:
+        """Create a bandwidth tenant with a QoS weight; optionally bind it
+        to vFPGA slots (a slot's traffic bills to its bound tenant)."""
+        t = self.scheduler.register_tenant(name, weight)
+        for slot in slots:
+            self.scheduler.bind_slot(slot, name)
+            if slot < len(self.vfpgas):
+                self.vfpgas[slot].tenant = name
+        return t
 
+    # ================================================= datapath =============
     def kick(self, slot: int) -> None:
-        """Drain the slot's send queues through credits + the RR arbiter."""
+        """Hand the slot's queued SG entries to the scheduler (non-blocking;
+        the scheduler thread batches, credits, and arbitrates them).
+        Callers synchronize on the completion queues or :meth:`drain`."""
         vf = self.vfpgas[slot]
         for sq, cq in ((vf.iface.sq_read, vf.iface.cq_read),
                        (vf.iface.sq_write, vf.iface.cq_write)):
@@ -277,24 +291,17 @@ class Shell:
                 if item is None:
                     break
                 ticket, sg = item
-                acct = self._credit(slot, sg.src_stream)
-                npkts = max(len(C.packetize(
-                    max(sg.length, 1), self.config.packet_bytes)), 1)
-                acct.acquire(min(npkts, acct.capacity))
-
-                def done(t, ticket=ticket, sg=sg, cq=cq, acct=acct,
-                         npkts=npkts, vf=vf):
-                    comp = vf.execute_sg(ticket, sg)
-                    cq.complete(comp)
-                    acct.release(min(npkts, acct.capacity))
-
-                self.arbiter.submit(f"vfpga{slot}.s{sg.src_stream}",
-                                    max(sg.length, 1),
-                                    tag=sg.opcode.value, on_done=done)
-        self.arbiter.drain()
+                self.scheduler.submit(
+                    slot=slot, stream=sg.src_stream, ticket=ticket, sg=sg,
+                    execute=vf.execute_sg, complete=cq.complete)
 
     def drain(self) -> None:
-        self.arbiter.drain()
+        """Block until every accepted submission has fully completed."""
+        self.scheduler.drain()
+        self.arbiter.drain()          # legacy direct-arbiter submissions
+
+    def close(self) -> None:
+        self.scheduler.close()
 
     def status(self) -> Dict[str, Any]:
         return {
@@ -303,4 +310,5 @@ class Shell:
             "compile_cache": self.static.compile_cache.stats(),
             "link_bytes": self.static.pcie.bytes_moved,
             "fairness": self.arbiter.fairness(),
+            "scheduler": self.scheduler.stats(),
         }

@@ -72,6 +72,7 @@ class VFpga:
         self.hbm_budget = hbm_budget
         self.hbm_used = 0
         self.load_history: List[Tuple[str, float]] = []
+        self.tenant: Optional[str] = None   # QoS principal (shell scheduler)
         self._addr_map: Dict[int, np.ndarray] = {}   # cThread buffers
         self._next_vaddr = 0x1000
         static.interrupts.register(slot, self.iface.irq)
@@ -198,5 +199,6 @@ class VFpga:
     def status(self) -> Dict[str, Any]:
         return {"slot": self.slot, "state": self.state.value,
                 "app": self.app.name if self.app else None,
+                "tenant": self.tenant,
                 "hbm_used": self.hbm_used, "hbm_budget": self.hbm_budget,
                 **self.iface.stats()}

@@ -3,11 +3,17 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — smoke tests must keep seeing 1 CPU device,
 while the dry-run initialises 512 placeholder devices before calling in.
+
+Mesh construction goes through :mod:`repro.compat` so installs without
+``jax.sharding.AxisType`` (older JAX) still work — Auto is the implicit
+default there.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -15,8 +21,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     `pod` axis (512 chips).  DP/FSDP runs on (pod, data); TP/EP/SP on model."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.auto_axis_types(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
@@ -24,9 +30,9 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = data * model
     devs = jax.devices()[:n]
     assert len(devs) == n, f"need {n} devices, have {len(jax.devices())}"
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto),
-                         devices=devs)
+    return compat.make_mesh((data, model), ("data", "model"),
+                            axis_types=compat.auto_axis_types(2),
+                            devices=devs)
 
 
 def mesh_chips(mesh: Mesh) -> int:

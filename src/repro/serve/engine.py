@@ -44,7 +44,8 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, mmu: MMU, *,
                  max_batch: int = 8, max_len: int = 1024,
-                 use_pallas: bool = False, seed: int = 0):
+                 use_pallas: bool = False, seed: int = 0,
+                 shell=None, slot: int = 0, tenant: Optional[str] = None):
         assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
             "paged engine serves attention archs (DESIGN.md §5)"
         self.cfg = cfg
@@ -63,6 +64,16 @@ class ServingEngine:
         self.completed: List[Request] = []
         self.steps = 0
         self.tokens_out = 0
+        # Optional shell binding: decode-step I/O is then submitted through
+        # the shell scheduler (weighted credits + arbiter) instead of
+        # bypassing the shared link — multi-tenant serving engines contend
+        # for bandwidth exactly like any other vFPGA traffic.
+        self.shell = shell
+        self.slot = slot
+        self.tenant = tenant
+        self.io_bytes = 0
+        if shell is not None and tenant is not None:
+            shell.scheduler.bind_slot(slot, tenant)
 
     # -------------------------------------------------------------- API ----
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
@@ -147,6 +158,8 @@ class ServingEngine:
             use_pallas=self.use_pallas)
         logits = np.asarray(logits)
         self.steps += 1
+        self._submit_step_io(n_live=len(live), logits_row_bytes=(
+            logits[0].nbytes if len(logits) else 0))
 
         emitted = 0
         for i, req in enumerate(self.slots):
@@ -166,6 +179,18 @@ class ServingEngine:
                 self.slots[i] = None
         self.tokens_out += emitted
         return emitted
+
+    def _submit_step_io(self, n_live: int, logits_row_bytes: int) -> None:
+        """Bill this decode step's host I/O (token ids in, sampled logits
+        row out per live request) to our tenant through the shell
+        scheduler, so serving bandwidth is QoS-scheduled, not free."""
+        if self.shell is None or n_live == 0:
+            return
+        nbytes = n_live * (4 + logits_row_bytes)
+        self.io_bytes += nbytes
+        self.shell.scheduler.submit_io(
+            nbytes, slot=self.slot, tenant=self.tenant, tag="decode_io",
+            wait=True, timeout=30.0)
 
     def run(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()

@@ -14,10 +14,11 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                            axis_types=compat.auto_axis_types(3))
 
     # ---- hierarchical all-reduce == flat psum -----------------------------
     from repro.core.services.collectives import CollectiveService, CollectiveConfig
@@ -59,10 +60,15 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("rep", [0])
 def test_hierarchical_ar_and_cp_attention(rep):
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+                            # forced-host-device scripts are CPU-only; an
+                            # unpinned platform probes for TPUs (minutes of
+                            # metadata-server retries in some containers)
+                            "JAX_PLATFORMS": "cpu"})
     assert "MULTIDEV_OK" in r.stdout, f"\nstdout:{r.stdout}\nstderr:{r.stderr[-2000:]}"

@@ -54,11 +54,12 @@ DISAGG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
     from repro.serve.disaggregated import make_handoff_fn, handoff_wire_bytes
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                            axis_types=compat.auto_axis_types(3))
     handoff, qp = make_handoff_fn(mesh)
     # dim0 pod-sharded: rows 0-1 = prefill pod KV, rows 2-3 = decode pool
     cache = {"k": jnp.arange(4 * 6, dtype=jnp.float32).reshape(4, 6),
@@ -76,9 +77,13 @@ DISAGG = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_disaggregated_handoff_multidev():
     r = subprocess.run([sys.executable, "-c", DISAGG], capture_output=True,
                        text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+                            # see test_collectives_multidev: pin to CPU so
+                            # the child never probes for TPU backends
+                            "JAX_PLATFORMS": "cpu"})
     assert "DISAGG_OK" in r.stdout, f"\n{r.stdout}\n{r.stderr[-2000:]}"

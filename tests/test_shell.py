@@ -2,7 +2,10 @@
 credits/fairness invariants, MMU paging, sniffer, interrupts."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.apps import (make_aes_artifact, make_hll_artifact,
                         make_passthrough_artifact)
