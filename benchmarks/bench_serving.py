@@ -3,11 +3,28 @@
 Token-by-token decode is the sequential-dependence pipeline the paper names
 explicitly ("LLMs, where each token depends on the previously generated
 token").  The serving engine fills decode bubbles with concurrent requests
-through the paged-KV MMU; throughput should scale with concurrency until
-compute saturates — Fig 10b's shape, produced by an LM."""
+through the paged-KV MMU.
+
+Two sweeps:
+
+  * decode throughput vs (batch x page_size x use_pallas) on the
+    device-resident hot path — donated pools, fused on-device sampling,
+    cached block tables.  Rows carry the machine-readable schema
+    (``config``/``tokens_per_s``/``mean_s``) and land in
+    ``BENCH_serving.json`` via ``benchmarks.run``.
+  * the paper-shaped concurrency scaling curve (Fig 10b's shape).
+
+Reproduce: PYTHONPATH=src python -m benchmarks.run --only llm_serving
+"""
 from __future__ import annotations
 
+import time
+
 import numpy as np
+
+# must precede the jax import: common.py pins JAX_PLATFORMS=cpu, which
+# jax reads once at import time
+from benchmarks.common import emit_json
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +34,63 @@ from repro.core.services.mmu import MMU, MMUConfig
 from repro.models import transformer as T
 from repro.serve.engine import ServingEngine
 
+# (batch, page_size, use_pallas) — pallas runs in interpret mode on CPU,
+# so it gets one small config; the jnp oracle carries the wide sweep.
+SWEEP = [
+    (1, 16, False),
+    (4, 16, False),
+    (8, 16, False),
+    (16, 16, False),
+    (8, 4, False),
+    (8, 64, False),
+    (2, 16, True),
+]
 
-def run(new_tokens: int = 12):
+
+def _decode_throughput(cfg, params, *, batch: int, page: int,
+                       use_pallas: bool, new_tokens: int = 32) -> dict:
+    rng = np.random.RandomState(0)
+    mmu = MMU(MMUConfig(page_size=page, n_pages=2048))
+    eng = ServingEngine(cfg, params, mmu, max_batch=batch, max_len=256,
+                        use_pallas=use_pallas)
+    for _ in range(batch):
+        plen = int(rng.randint(8, 24))
+        eng.submit(rng.randint(3, cfg.vocab_size, plen).tolist(),
+                   max_new_tokens=new_tokens)
+    eng.step()                       # warm the decode executable
+    toks0, steps0 = eng.tokens_out, eng.steps
+    t0 = time.perf_counter()
+    while eng.pending():
+        eng.step()
+    dt = time.perf_counter() - t0
+    decode_toks = eng.tokens_out - toks0
+    steps = eng.steps - steps0
+    return {
+        "config": f"b{batch}_p{page}_pallas{int(use_pallas)}",
+        "tokens_per_s": decode_toks / max(dt, 1e-9),
+        "mean_s": dt / max(steps, 1),
+        "decode_tokens": decode_toks,
+        "steps": steps,
+        "tlb_hit_rate": mmu.tlb.hit_rate,
+        "block_table_uploads": eng.block_table.row_uploads,
+        "block_table_hits": eng.block_table.hits,
+    }
+
+
+def run(new_tokens: int = 32):
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    rows = []
+    for batch, page, use_pallas in SWEEP:
+        nt = 8 if use_pallas else new_tokens      # interpret mode is slow
+        rows.append(_decode_throughput(cfg, params, batch=batch, page=page,
+                                       use_pallas=use_pallas,
+                                       new_tokens=nt))
+    return rows
+
+
+def run_scaling(new_tokens: int = 12):
+    """Paper-shaped curve: throughput vs concurrency (Fig 10b)."""
     cfg = get_config("smollm-135m").reduced()
     params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
     rng = np.random.RandomState(0)
@@ -28,12 +100,11 @@ def run(new_tokens: int = 12):
         mmu = MMU(MMUConfig(page_size=16, n_pages=512))
         eng = ServingEngine(cfg, params, mmu, max_batch=streams,
                             max_len=256)
-        for i in range(streams):
+        for _ in range(streams):
             plen = int(rng.randint(8, 24))
             eng.submit(rng.randint(3, cfg.vocab_size, plen).tolist(),
                        max_new_tokens=new_tokens)
-        # warm the decode executable at this batch size
-        eng.step()
+        eng.step()                   # warm the decode executable
         stats = eng.run()
         tps = stats["tokens_per_s"]
         base = base or tps
@@ -50,4 +121,7 @@ def run(new_tokens: int = 12):
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run(), "LLM serving: decode throughput vs concurrency (paged KV)")
+    rows = run()
+    emit(rows, "LLM serving: decode tokens/s vs batch x page x kernel")
+    emit_json(rows, "BENCH_serving.json", bench="bench_serving")
+    emit(run_scaling(), "LLM serving: decode throughput vs concurrency")

@@ -1,9 +1,20 @@
-"""Shared benchmark helpers: timing, CSV row emission."""
+"""Shared benchmark helpers: timing, CSV row emission, JSON artifacts.
+
+The JAX_PLATFORMS=cpu pin below makes benchmarks CPU-deterministic unless
+the caller overrides it.  jax reads the variable once at import time, so
+the pin only covers entrypoints that import this module (or set the env)
+*before* importing jax — ``benchmarks.run`` and ``scripts/ci.sh`` do, and
+bench modules with a ``__main__`` path must import common first.
+"""
 from __future__ import annotations
 
+import json
+import os
 import statistics
 import time
 from typing import Callable, Dict, List
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
 def timeit(fn: Callable, *, warmup: int = 2, trials: int = 5) -> Dict:
@@ -28,6 +39,35 @@ def emit(rows: List[Dict], title: str) -> None:
     print(",".join(cols))
     for r in rows:
         print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def emit_json(rows: List[Dict], path: str, *, bench: str) -> None:
+    """Write machine-readable bench rows.
+
+    Schema: a list of ``{bench, config, tokens_per_s, mean_s}`` records
+    (extra per-row keys are carried through under ``extra``).  ``config``
+    is taken from the row's "config" key; throughput-style rows without
+    one are skipped.
+    """
+    out = []
+    for r in rows:
+        if "config" not in r:
+            continue
+        rec = {
+            "bench": bench,
+            "config": r["config"],
+            "tokens_per_s": float(r.get("tokens_per_s", 0.0)),
+            "mean_s": float(r.get("mean_s", 0.0)),
+        }
+        extra = {k: v for k, v in r.items()
+                 if k not in ("config", "tokens_per_s", "mean_s")}
+        if extra:
+            rec["extra"] = extra
+        out.append(rec)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, default=str)
+        f.write("\n")
+    print(f"[bench] wrote {path} ({len(out)} rows)")
 
 
 def _fmt(v) -> str:

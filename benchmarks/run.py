@@ -1,6 +1,12 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Suites listed in ``JSON_ARTIFACTS`` additionally write machine-readable
+``BENCH_<name>.json`` files (schema: rows of ``{bench, config,
+tokens_per_s, mean_s}``) for trend tracking across PRs.  The
+``benchmarks.common`` import pins JAX_PLATFORMS=cpu for every suite.
+A ``module:attr`` suite entry calls that attribute instead of ``run``.
 """
 from __future__ import annotations
 
@@ -9,7 +15,7 @@ import sys
 import time
 import traceback
 
-from benchmarks.common import emit
+from benchmarks.common import emit, emit_json
 
 SUITES = [
     ("table2_migration", "bench_migration",
@@ -31,12 +37,19 @@ SUITES = [
     ("fig12_nn", "bench_nn_inference",
      "Fig 12: NN inference Coyote vs staged-copy"),
     ("llm_serving", "bench_serving",
-     "LLM serving: continuous batching on paged KV"),
+     "LLM serving: decode tokens/s vs batch x page x kernel"),
+    ("llm_serving_scaling", "bench_serving:run_scaling",
+     "LLM serving: decode throughput vs concurrency (Fig 10b shape)"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
      "Assignment roofline table (from dry-run cache)"),
 ]
+
+# suite name -> (json path, bench id) for machine-readable artifacts
+JSON_ARTIFACTS = {
+    "llm_serving": ("BENCH_serving.json", "bench_serving"),
+}
 
 
 def main(argv=None) -> int:
@@ -50,9 +63,13 @@ def main(argv=None) -> int:
             continue
         t0 = time.perf_counter()
         try:
+            module, _, attr = module.partition(":")
             mod = __import__(f"benchmarks.{module}", fromlist=["run"])
-            rows = mod.run()
+            rows = getattr(mod, attr or "run")()
             emit(rows, f"{title}  [{time.perf_counter()-t0:.1f}s]")
+            if name in JSON_ARTIFACTS:
+                path, bench = JSON_ARTIFACTS[name]
+                emit_json(rows, path, bench=bench)
         except Exception:
             failures += 1
             print(f"\n## {title}\nFAILED:", file=sys.stderr)

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 smoke path + quick serving bench.
+#
+#   scripts/ci.sh            # smoke tests (-m "not slow") + llm_serving bench
+#   FULL=1 scripts/ci.sh     # full tier-1 suite (includes slow subprocess tests)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${FULL:-0}" == "1" ]]; then
+  python -m pytest -x -q
+else
+  python -m pytest -x -q -m "not slow"
+fi
+
+# substring match: runs both llm_serving (sweep -> BENCH_serving.json)
+# and llm_serving_scaling (Fig 10b concurrency curve), ~40s total
+python -m benchmarks.run --only llm_serving

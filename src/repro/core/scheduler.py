@@ -187,6 +187,14 @@ class ShellScheduler:
         with self._lock:
             return dict(self._tenants)
 
+    def tenant_pending(self, name: str) -> int:
+        """Accepted-but-uncompleted submissions for a tenant — surfaced
+        by ``ServingEngine.run()`` stats (``io_pending``) so async
+        decode-IO billing that failed to drain is visible, never silent."""
+        with self._lock:
+            t = self._tenants.get(name)
+            return t.pending if t is not None else 0
+
     def _rebalance_weights(self, tenant_name: str,
                            extra: Optional[str] = None) -> None:
         """Split a tenant's weight evenly over its BACKLOGGED requesters so

@@ -30,6 +30,11 @@ import numpy as np
 
 from repro.core.services.base import Service
 
+try:                                  # device view is optional: the MMU
+    import jax.numpy as jnp          # driver half works without a device
+except ImportError:                  # pragma: no cover
+    jnp = None
+
 
 @dataclass(frozen=True)
 class MMUConfig:
@@ -134,9 +139,16 @@ class MMU(Service):
         self._free = list(range(c.n_pages - 1, -1, -1))
         self._host_free = list(range(c.host_pool_pages - 1, -1, -1))
         self._seqs: Dict[int, SeqEntry] = {}
+        # per-sequence mapping version: bumped whenever a sequence's page
+        # list changes (alloc/extend/evict/migrate), so cached device
+        # block-table views re-upload only the rows that actually moved.
+        self._map_version: Dict[int, int] = {}
         self.page_faults = 0
         self.migrations_out = 0
         self.migrations_in = 0
+
+    def _bump_map(self, seq_id: int) -> None:
+        self._map_version[seq_id] = self._map_version.get(seq_id, 0) + 1
 
     # -- reconfiguration (paper scenario #1: swap 2 MB -> 1 GB pages) -------
     def configure(self, config: MMUConfig) -> None:
@@ -154,6 +166,7 @@ class MMU(Service):
             if seq_id in self._seqs:
                 raise KeyError(f"seq {seq_id} already allocated")
             self._seqs[seq_id] = SeqEntry(seq_id=seq_id)
+            self._map_version[seq_id] = 0
         if n_tokens:
             self.extend_seq(seq_id, n_tokens, slot=slot)
 
@@ -165,10 +178,13 @@ class MMU(Service):
             se = self._seqs[seq_id]
             se.length += n_tokens
             need = -(-se.length // c.page_size)          # ceil
+            grew = len(se.pages) < need
             while len(se.pages) < need:
                 ppage = self._take_device_page(seq_id, slot)
                 se.pages.append(PageTableEntry(
                     vpage=len(se.pages), ppage=ppage))
+            if grew:
+                self._bump_map(seq_id)
 
     def _take_device_page(self, seq_id: int, slot: int) -> int:
         if not self._free:
@@ -206,11 +222,13 @@ class MMU(Service):
                 pte.ppage = -1
                 self.migrations_out += 1
                 self.tlb.invalidate(seq_id)
+                self._bump_map(seq_id)
                 return
 
     def free_seq(self, seq_id: int) -> None:
         with self._lock:
             se = self._seqs.pop(seq_id)
+            self._map_version.pop(seq_id, None)
             for pte in se.pages:
                 if pte.on_host:
                     self._host_free.append(pte.host_slot)
@@ -243,6 +261,7 @@ class MMU(Service):
                 pte.on_host = False
                 pte.host_slot = -1
                 self.migrations_in += 1
+                self._bump_map(seq_id)
             self.tlb.insert(seq_id, vpage, pte.ppage)
             return pte.ppage, off
 
@@ -264,6 +283,23 @@ class MMU(Service):
         with self._lock:
             return np.array([self._seqs[s].length if s in self._seqs else 0
                              for s in seq_ids], np.int32)
+
+    def seq_map_version(self, seq_id: int) -> int:
+        """Monotone per-sequence mapping version (-1 = not allocated).
+        Changes iff the sequence's page list changed."""
+        with self._lock:
+            return self._map_version.get(seq_id, -1)
+
+    def block_table_device(self, n_slots: int,
+                           max_pages: int) -> "DeviceBlockTable":
+        """A cached device-resident block-table view over a fixed window
+        of engine slots — the steady-state decode step reads a device
+        array that is already there; only rows whose mapping changed
+        (alloc/extend/free/evict deltas) are re-uploaded."""
+        if jnp is None:
+            raise ImportError("jax is required for MMU device block-table "
+                              "views (the host-side driver works without)")
+        return DeviceBlockTable(self, n_slots, max_pages)
 
     def channel_of(self, ppage: int) -> int:
         """Striping: which channel (HBM bank) a page lives on."""
@@ -288,3 +324,66 @@ class MMU(Service):
         s = super().status()
         s.update(self.utilization())
         return s
+
+
+class DeviceBlockTable:
+    """Incremental device mirror of the MMU block table for a slot window.
+
+    The serving engine binds a sequence id to each slot; ``device_view()``
+    returns a (n_slots, max_pages) int32 device array, re-uploading only
+    the rows whose MMU mapping version changed since the last call.  In
+    steady-state decode (no page-boundary crossing, no slot churn) the
+    call is a pure cache hit: zero host->device traffic.
+    """
+
+    def __init__(self, mmu: "MMU", n_slots: int, max_pages: int):
+        self.mmu = mmu
+        self.n_slots = n_slots
+        self.max_pages = max_pages
+        self._seq = [-1] * n_slots                    # slot -> seq id
+        self._ver = [-2] * n_slots                    # last-seen map version
+        self._host = np.full((n_slots, max_pages), -1, np.int32)
+        self._dev = None
+        self._stale = set(range(n_slots))
+        self.row_uploads = 0                          # rows re-uploaded
+        self.hits = 0                                 # pure cache hits
+        self.last_updated_rows: list = []             # rows synced last view
+
+    def bind(self, slot: int, seq_id: int) -> None:
+        self._seq[slot] = seq_id
+        self._ver[slot] = -2                          # force refresh
+        self._stale.add(slot)
+
+    def unbind(self, slot: int) -> None:
+        self._seq[slot] = -1
+        self._ver[slot] = -2
+        self._host[slot] = -1
+        self._stale.add(slot)
+
+    def device_view(self):
+        """(n_slots, max_pages) int32 device array, incrementally synced."""
+        for i, sid in enumerate(self._seq):
+            if sid < 0:
+                continue
+            v = self.mmu.seq_map_version(sid)
+            if v != self._ver[i]:
+                self._host[i] = self.mmu.block_table(
+                    [sid], self.max_pages)[0]
+                self._ver[i] = v
+                self._stale.add(i)
+        if self._dev is None:
+            self._dev = jnp.asarray(self._host)
+            self.row_uploads += self.n_slots
+            self.last_updated_rows = list(range(self.n_slots))
+            self._stale.clear()
+        elif self._stale:
+            rows = sorted(self._stale)
+            self._dev = self._dev.at[jnp.asarray(rows, jnp.int32)].set(
+                jnp.asarray(self._host[rows]))
+            self.row_uploads += len(rows)
+            self.last_updated_rows = rows
+            self._stale.clear()
+        else:
+            self.hits += 1
+            self.last_updated_rows = []
+        return self._dev

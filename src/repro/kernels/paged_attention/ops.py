@@ -9,11 +9,17 @@ from repro.kernels.paged_attention.paged_attention import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "pages_per_block"))
 def paged_decode(q, k_pages, v_pages, block_tables, seq_lens, *,
-                 use_pallas: bool = False, interpret: bool = True):
-    """q (B, H, D); pages (P, page, K, D); tables (B, maxp); lens (B,)."""
+                 use_pallas: bool = False, interpret: bool = True,
+                 pages_per_block=None):
+    """q (B, H, D); pages (P, page, K, D); tables (B, maxp); lens (B,).
+
+    ``pages_per_block`` widens the Pallas grid step to process that many
+    pages at once (None = auto-size toward a 128-row KV tile)."""
     if use_pallas:
         return paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                               pages_per_block=pages_per_block,
                                interpret=interpret)
     return paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens)

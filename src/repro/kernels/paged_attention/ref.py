@@ -35,4 +35,7 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    # rows with no valid position (empty batch slots) attend to nothing
+    any_valid = jnp.any(mask, axis=1)                   # (B,)
+    o = jnp.where(any_valid[:, None, None, None], o, 0.0)
     return o.reshape(b, h, d).astype(q.dtype)

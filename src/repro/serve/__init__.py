@@ -1,7 +1,10 @@
 from repro.serve.engine import Request, ServingEngine
-from repro.serve.paged_model import decode_step_paged, make_pools, write_prefill
-from repro.serve.sampler import SamplerConfig, sample
+from repro.serve.paged_model import (TRACE_COUNTS, decode_step_paged,
+                                     make_pools, prefill_paged,
+                                     write_prefill)
+from repro.serve.sampler import SamplerConfig, sample, sample_per_row
 from repro.serve.disaggregated import handoff_wire_bytes, make_handoff_fn
 __all__ = ["Request", "ServingEngine", "decode_step_paged", "make_pools",
-           "write_prefill", "SamplerConfig", "sample",
+           "prefill_paged", "write_prefill", "TRACE_COUNTS",
+           "SamplerConfig", "sample", "sample_per_row",
            "handoff_wire_bytes", "make_handoff_fn"]

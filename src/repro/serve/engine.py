@@ -7,6 +7,43 @@ interleaving many concurrent requests (cThread streams) into one batched
 decode step.  Admission is credit-based (page budget via the MMU), pages
 are allocated on demand and freed at completion, and finished rows are
 immediately replaced from the queue (continuous batching).
+
+Hot-path invariants (the Coyote v2 "shell out of the datapath" story):
+
+  * **Device-resident state.**  The KV pools, block tables, row lengths,
+    last-sampled tokens, per-row temperatures, and the PRNG key all live
+    on device.  Block tables are a cached :class:`DeviceBlockTable` view
+    owned by the MMU — rows are re-uploaded only when an alloc/extend/
+    free/evict delta changes a sequence's mapping (i.e. on page-boundary
+    crossings and slot churn), never per step.
+  * **Donation.**  ``decode_step_paged`` donates the pools and the
+    decode-state buffers, so KV is updated in place instead of copied.
+    ``self.pools`` / ``self.dev_lens`` / ``self.dev_tokens`` /
+    ``self.rng`` must be reassigned from the step's return values every
+    call — holding a stale reference to a donated buffer is an error.
+    The block-table view is NOT donated (the cache reuses it).
+  * **One (B,) vector per step.**  Sampling (greedy argmax + Gumbel-max
+    temperature) is fused inside the jitted step; the (B, vocab) logits
+    tensor never leaves the device.  The only per-step host<->device
+    traffic is reading back the (B,) int32 token vector.
+  * **Batched prefill.**  All requests admitted in one ``_admit()`` pass
+    run as a single padded forward (``prefill_paged``), with prompt
+    lengths and batch counts bucketed to powers of two to bound retraces.
+  * **Non-blocking billing.**  Decode-step I/O is submitted to the shell
+    scheduler asynchronously; credits settle at step boundaries
+    (``_settle_io``) and ``flush_io()`` drains the tail, so in normal
+    operation QoS accounting never stalls the decode loop.  The one
+    intended exception is the scheduler's submitter-side back-pressure:
+    a tenant whose pending I/O hits its bound stalls *itself* at submit
+    (paper §7.2 containment) — that is the QoS design, not a hot-path
+    regression.
+  * **One compilation.**  ``decode_step_paged`` traces exactly once per
+    (engine shape, flags) across a run regardless of occupancy changes —
+    ``repro.serve.paged_model.TRACE_COUNTS`` is the retrace guard.
+
+Bench reproduction: ``PYTHONPATH=src python -m benchmarks.run --only
+llm_serving`` (writes ``BENCH_serving.json``), or ``scripts/ci.sh`` for
+the tier-1 smoke path plus the quick bench.
 """
 from __future__ import annotations
 
@@ -22,9 +59,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.services.mmu import MMU, MMUConfig
-from repro.models import transformer as T
 from repro.serve.paged_model import (decode_step_paged, make_pools,
-                                     write_prefill)
+                                     prefill_paged)
 
 
 @dataclass
@@ -41,10 +77,20 @@ class Request:
     done: bool = False
 
 
+def _bucket(n: int, cap: int) -> int:
+    """Round up to a power of two (capped) so padded prefill shapes
+    bucket into O(log) distinct compilations."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, mmu: MMU, *,
                  max_batch: int = 8, max_len: int = 1024,
-                 use_pallas: bool = False, seed: int = 0,
+                 use_pallas: bool = False,
+                 pages_per_block: Optional[int] = None, seed: int = 0,
                  shell=None, slot: int = 0, tenant: Optional[str] = None):
         assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
             "paged engine serves attention archs (DESIGN.md §5)"
@@ -56,14 +102,22 @@ class ServingEngine:
         self.max_len = max_len
         self.max_pages = -(-max_len // self.page)
         self.use_pallas = use_pallas
+        self.pages_per_block = pages_per_block
         self.pools = make_pools(cfg, mmu.config.n_pages, self.page)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
-        self._rng = np.random.RandomState(seed)
+        self._rng = np.random.RandomState(seed)     # host sampling oracle
         self._rid = itertools.count(1)
         self.completed: List[Request] = []
         self.steps = 0
         self.tokens_out = 0
+        # Device-resident decode state: block tables (cached MMU view),
+        # row lengths, last tokens, temperatures, PRNG key.
+        self.block_table = mmu.block_table_device(max_batch, self.max_pages)
+        self.dev_lens = jnp.zeros((max_batch,), jnp.int32)
+        self.dev_tokens = jnp.zeros((max_batch,), jnp.int32)
+        self.dev_temps = jnp.zeros((max_batch,), jnp.float32)
+        self.rng = jax.random.PRNGKey(seed)
         # Optional shell binding: decode-step I/O is then submitted through
         # the shell scheduler (weighted credits + arbiter) instead of
         # bypassing the shared link — multi-tenant serving engines contend
@@ -72,6 +126,7 @@ class ServingEngine:
         self.slot = slot
         self.tenant = tenant
         self.io_bytes = 0
+        self._io_events: List = []
         if shell is not None and tenant is not None:
             shell.scheduler.bind_slot(slot, tenant)
 
@@ -93,6 +148,7 @@ class ServingEngine:
 
     # -------------------------------------------------------- admission ----
     def _admit(self) -> None:
+        admitted = []
         for i in range(self.max_batch):
             if self.slots[i] is not None or not self.queue:
                 continue
@@ -104,69 +160,120 @@ class ServingEngine:
             self.queue.popleft()
             self.mmu.alloc_seq(req.rid, len(req.prompt), slot=i)
             self.slots[i] = req
-            self._prefill(i, req)
+            self.block_table.bind(i, req.rid)
+            admitted.append((i, req))
+        if admitted:
+            self._prefill_batch(admitted)
 
-    def _prefill(self, slot: int, req: Request) -> None:
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        hidden, _, kv_stack, _ = T.forward(self.params, self.cfg, toks,
-                                           collect_kv=True)
-        tables = jnp.asarray(
-            self.mmu.block_table([req.rid], self.max_pages))
-        lens = jnp.asarray([len(req.prompt)], jnp.int32)
-        self.pools = write_prefill(self.pools, kv_stack, tables, lens,
-                                   self.page)
-        logits = T.lm_logits(self.params, self.cfg, hidden[:, -1])
-        tok = self._sample(np.asarray(logits), req.temperature)[0]
-        req.out_tokens.append(int(tok))
-        req.t_first_token = time.perf_counter()
-        self.mmu.extend_seq(req.rid, 1, slot=slot)
-        self.tokens_out += 1
+    def _prefill_batch(self, admitted) -> None:
+        """One padded forward for every request admitted in this pass."""
+        n = len(admitted)
+        nb = _bucket(n, self.max_batch)
+        smax = max(len(r.prompt) for _, r in admitted)
+        sb = _bucket(smax, 1 << 30)
+        # prompts may exceed max_len (such requests finish right after
+        # prefill): size the prefill tables for the longest prompt
+        maxp = max(self.max_pages, -(-sb // self.page))
+        tokens = np.zeros((nb, sb), np.int32)
+        lens = np.zeros((nb,), np.int32)
+        temps = np.zeros((nb,), np.float32)
+        tables = np.full((nb, maxp), -1, np.int32)
+        tables[:n] = self.mmu.block_table(
+            [req.rid for _, req in admitted], maxp)
+        for j, (_, req) in enumerate(admitted):
+            tokens[j, :len(req.prompt)] = req.prompt
+            lens[j] = len(req.prompt)
+            temps[j] = req.temperature
+        first, self.pools, self.rng = prefill_paged(
+            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(lens),
+            jnp.asarray(tables), self.rng, jnp.asarray(temps),
+            cfg=self.cfg, page_size=self.page)
+        first = np.asarray(first)
+        now = time.perf_counter()
+        slots_i, row_lens, row_toks, row_temps = [], [], [], []
+        for j, (i, req) in enumerate(admitted):
+            tok = int(first[j])
+            req.out_tokens.append(tok)
+            req.t_first_token = now
+            self.mmu.extend_seq(req.rid, 1, slot=i)
+            self.tokens_out += 1
+            if len(req.prompt) + 1 >= self.max_len:
+                # no decode budget left: complete straight from prefill
+                req.done = True
+                req.t_done = now
+                self.mmu.free_seq(req.rid)
+                self.block_table.unbind(i)
+                self.completed.append(req)
+                self.slots[i] = None
+                continue
+            slots_i.append(i)
+            # write position of the NEXT decode step's token
+            row_lens.append(len(req.prompt))
+            row_toks.append(tok)
+            row_temps.append(req.temperature)
+        if slots_i:
+            self._sync_slot_state(slots_i, row_lens, row_toks, row_temps)
+
+    def _sync_slot_state(self, slots_i, lens, toks, temps) -> None:
+        """Push slot-transition deltas into the device-resident state
+        (admissions and frees only — never on the per-step path)."""
+        idx = jnp.asarray(slots_i, jnp.int32)
+        self.dev_lens = self.dev_lens.at[idx].set(
+            jnp.asarray(lens, jnp.int32))
+        self.dev_tokens = self.dev_tokens.at[idx].set(
+            jnp.asarray(toks, jnp.int32))
+        self.dev_temps = self.dev_temps.at[idx].set(
+            jnp.asarray(temps, jnp.float32))
 
     def _sample(self, logits: np.ndarray, temperature: float) -> np.ndarray:
+        """Host-side sampling oracle for the fused on-device sampler:
+        vectorized Gumbel-max (greedy at temperature <= 0)."""
         logits = logits[..., :self.cfg.vocab_size]
         if temperature <= 0:
             return np.argmax(logits, axis=-1)
-        z = logits / temperature
-        z = z - z.max(axis=-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(axis=-1, keepdims=True)
-        return np.array([self._rng.choice(p.shape[-1], p=row)
-                         for row in p])
+        u = np.clip(self._rng.random_sample(logits.shape), 1e-12, 1 - 1e-12)
+        g = -np.log(-np.log(u))
+        return np.argmax(logits / temperature + g, axis=-1)
 
     # ------------------------------------------------------------ decode ----
     def step(self) -> int:
         """One continuous-batching engine step; returns tokens emitted."""
+        self._settle_io()
         self._admit()
         if self.active == 0:
             return 0
-        rids = [r.rid if r is not None else -1 for r in self.slots]
-        live = [r for r in self.slots if r is not None]
-        tables = np.full((self.max_batch, self.max_pages), -1, np.int32)
-        lens = np.zeros((self.max_batch,), np.int32)
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tables[i] = self.mmu.block_table([req.rid], self.max_pages)[0]
-            # length BEFORE this step's token (its write position)
-            lens[i] = len(req.prompt) + len(req.out_tokens) - 1
-            tokens[i, 0] = req.out_tokens[-1]
-
-        logits, self.pools = decode_step_paged(
-            self.params, self.pools, jnp.asarray(tables), jnp.asarray(lens),
-            jnp.asarray(tokens), cfg=self.cfg, page_size=self.page,
-            use_pallas=self.use_pallas)
-        logits = np.asarray(logits)
+        tables = self.block_table.device_view()
+        # rows whose mapping changed (page crossing, eviction, fault-back)
+        # re-sync lens/tokens from host truth, so device state can never
+        # drift from the MMU even when a live row loses a page under
+        # pressure.  Steady-state steps see no updated rows and skip this.
+        upd = [i for i in self.block_table.last_updated_rows
+               if self.slots[i] is not None]
+        if upd:
+            self._sync_slot_state(
+                upd,
+                [len(self.slots[i].prompt)
+                 + len(self.slots[i].out_tokens) - 1 for i in upd],
+                [self.slots[i].out_tokens[-1] for i in upd],
+                [self.slots[i].temperature for i in upd])
+        next_toks, self.pools, self.dev_lens, self.rng = decode_step_paged(
+            self.params, self.pools, tables, self.dev_lens,
+            self.dev_tokens, self.rng, self.dev_temps, cfg=self.cfg,
+            page_size=self.page, use_pallas=self.use_pallas,
+            pages_per_block=self.pages_per_block)
+        self.dev_tokens = next_toks
+        # the ONLY per-step device->host sync: the (B,) int32 token vector
+        toks = np.asarray(next_toks)
         self.steps += 1
-        self._submit_step_io(n_live=len(live), logits_row_bytes=(
-            logits[0].nbytes if len(logits) else 0))
+        n_live = self.active
+        self._submit_step_io(n_live=n_live)
 
         emitted = 0
+        freed, f_lens, f_toks, f_temps = [], [], [], []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(self._sample(logits[i][None], req.temperature)[0])
-            req.out_tokens.append(tok)
+            req.out_tokens.append(int(toks[i]))
             emitted += 1
             self.mmu.extend_seq(req.rid, 1, slot=i)
             total = len(req.prompt) + len(req.out_tokens)
@@ -175,29 +282,67 @@ class ServingEngine:
                 req.done = True
                 req.t_done = time.perf_counter()
                 self.mmu.free_seq(req.rid)
+                self.block_table.unbind(i)
                 self.completed.append(req)
                 self.slots[i] = None
+                freed.append(i)
+                f_lens.append(0)
+                f_toks.append(0)
+                f_temps.append(0.0)
+        if freed:
+            self._sync_slot_state(freed, f_lens, f_toks, f_temps)
         self.tokens_out += emitted
         return emitted
 
-    def _submit_step_io(self, n_live: int, logits_row_bytes: int) -> None:
-        """Bill this decode step's host I/O (token ids in, sampled logits
-        row out per live request) to our tenant through the shell
-        scheduler, so serving bandwidth is QoS-scheduled, not free."""
+    # ---------------------------------------------------------- billing ----
+    def _submit_step_io(self, n_live: int) -> None:
+        """Bill this decode step's host I/O — one int32 token per live
+        row is all that crosses the link — to our tenant through the
+        shell scheduler.  Submission is async: the event is collected and
+        settled at the next step boundary.  Only the scheduler's
+        submitter back-pressure (tenant pending bound) can block here,
+        which is the intended self-containment of an over-subscribed
+        tenant."""
         if self.shell is None or n_live == 0:
             return
-        nbytes = n_live * (4 + logits_row_bytes)
+        nbytes = n_live * 4
         self.io_bytes += nbytes
-        self.shell.scheduler.submit_io(
+        ev = self.shell.scheduler.submit_io(
             nbytes, slot=self.slot, tenant=self.tenant, tag="decode_io",
-            wait=True, timeout=30.0)
+            wait=False)
+        self._io_events.append(ev)
+
+    def _settle_io(self) -> None:
+        """Drop completed I/O events (non-blocking settle)."""
+        if self._io_events:
+            self._io_events = [e for e in self._io_events if not e.is_set()]
+
+    def flush_io(self, timeout: float = 30.0) -> bool:
+        """Wait (bounded by one shared deadline) for outstanding billed
+        I/O to clear the link.  Events that do not clear stay queued so
+        accounting is never silently dropped; returns True when fully
+        drained."""
+        deadline = time.perf_counter() + timeout
+        remaining = []
+        for ev in self._io_events:
+            left = deadline - time.perf_counter()
+            if left <= 0 or not ev.wait(timeout=left):
+                remaining.append(ev)
+        self._io_events = remaining
+        return not remaining
 
     def run(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()
         while self.pending() and self.steps < max_steps:
             self.step()
+        drained = self.flush_io()
         dt = time.perf_counter() - t0
-        return {"wall_s": dt, "engine_steps": self.steps,
-                "tokens": self.tokens_out,
-                "tokens_per_s": self.tokens_out / max(dt, 1e-9),
-                "completed": len(self.completed)}
+        stats = {"wall_s": dt, "engine_steps": self.steps,
+                 "tokens": self.tokens_out,
+                 "tokens_per_s": self.tokens_out / max(dt, 1e-9),
+                 "completed": len(self.completed)}
+        if self.shell is not None and self.tenant is not None:
+            stats["io_drained"] = drained
+            stats["io_pending"] = self.shell.scheduler.tenant_pending(
+                self.tenant)
+        return stats

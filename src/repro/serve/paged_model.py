@@ -3,8 +3,30 @@
 The serving twin of ``repro.models.transformer.decode_step``: instead of a
 dense per-sequence cache, KV lives in the MMU service's page pools and
 attention walks the block tables (via the Pallas paged-attention kernel or
-its oracle).  Pools are stacked on the layer axis and scanned, so depth
-never bloats the HLO; pool buffers are donated every step.
+its oracle).
+
+Hot-path contract (device-resident decode):
+
+  * **Flat pool layout.**  The pools are a single
+    ``(n_layers * n_pages, page_size, kv_heads, head_dim)`` buffer per
+    side; layer ``l``'s physical page ``p`` lives at flat slot
+    ``l * n_pages + p``.  This lets the pools ride the decode scan as an
+    *aliased loop carry* — per-layer KV appends are in-place
+    dynamic-updates into one buffer — instead of as scan inputs/outputs,
+    which would force a full pool copy every step.  Per-layer access is
+    pure page-id arithmetic (bias the block table by ``l * n_pages``), so
+    the paged-attention kernel is unchanged.
+  * **Donation.**  ``pools`` (and the decode-state buffers lens /
+    last_tokens / rng) are donated into the jitted steps — KV is updated
+    in place, never copied.  Callers must drop their reference and adopt
+    the returned arrays (the engine reassigns ``self.pools`` etc. every
+    step).
+  * **Fused sampling.**  Greedy argmax and Gumbel-max temperature
+    sampling happen inside the jit, so the (B, vocab) logits tensor never
+    crosses to the host — the step returns only a (B,) int32 token
+    vector.
+  * ``prefill_paged`` admits a whole batch of new requests in one padded
+    forward pass and scatters their KV into the pools in the same jit.
 
 Applicability: attention-family architectures.  SSM archs have O(1) decode
 state and bypass paging (DESIGN.md §5 — their MMU use is the constant-size
@@ -13,7 +35,7 @@ state page).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,74 +43,126 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels.paged_attention.ops import paged_decode
 from repro.models import attention, layers, mlp, moe
-from repro.models.transformer import _is_moe_layer, lm_logits
+from repro.models.transformer import _is_moe_layer, forward, lm_logits
+from repro.serve.sampler import sample_per_row
+
+# Trace-time counters, keyed by function name.  Incremented as a Python
+# side effect while tracing, so a test (or an operator) can assert that a
+# hot-path function compiled exactly once across a run — the retrace guard
+# for the device-resident decode contract.
+TRACE_COUNTS: Dict[str, int] = {}
+
+
+def _count_trace(name: str) -> None:
+    TRACE_COUNTS[name] = TRACE_COUNTS.get(name, 0) + 1
 
 
 def make_pools(cfg: ModelConfig, n_pages: int, page_size: int, *,
                dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Flat KV pools: layer ``l``'s page ``p`` is flat slot
+    ``l * n_pages + p`` of a (n_layers * n_pages, page, K, hd) buffer."""
     hd = cfg.resolved_head_dim
-    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    shape = (cfg.n_layers * n_pages, page_size, cfg.n_kv_heads, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
 def write_prefill(pools, layer_kv, tables, lens, page_size: int):
-    """Scatter a prefilled sequence batch into the pools.
+    """Scatter a prefilled sequence batch into the flat pools.
 
-    layer_kv: (ks, vs) each (L, B, S, K, hd); tables (B, maxp) int32;
-    lens (B,) prompt lengths (tokens beyond a row's len are dropped via a
-    dump page at pool slot... they are written to page 0 offset 0 of their
-    own page id — callers allocate exact pages so S == max len in batch).
+    layer_kv: (ks, vs) each (L, B, S, K, hd); tables (B, maxp) int32
+    per-layer page ids; lens (B,) prompt lengths.  One scatter per side:
+    tokens at/after a row's len (padding) and positions whose table entry
+    is unmapped are routed to an out-of-bounds flat slot and dropped by
+    the scatter (``mode="drop"``) — no gather of the existing pool
+    contents is needed.
     """
     ks, vs = layer_kv
     l, b, s, kh, hd = ks.shape
+    n_flat = pools["k"].shape[0]
+    n_pages = n_flat // l
     pos = jnp.arange(s)
     vpage = pos // page_size                         # (S,)
     off = pos % page_size
     ppage = jnp.take_along_axis(
         tables, jnp.broadcast_to(vpage[None], (b, s)), axis=1)  # (B,S)
-    valid = pos[None, :] < lens[:, None]             # (B,S)
-    safe_page = jnp.where(valid, ppage, 0)
+    valid = (pos[None, :] < lens[:, None]) & (ppage >= 0)       # (B,S)
+    base = (jnp.arange(l) * n_pages)[:, None, None]             # (L,1,1)
+    # invalid writes point one past the pool end: dropped by mode="drop"
+    flat_page = jnp.where(valid[None], base + ppage[None], n_flat)
+    flat_page = flat_page.reshape(-1)                # (L*B*S,)
+    flat_off = jnp.broadcast_to(
+        jnp.broadcast_to(off[None], (b, s)).reshape(-1)[None],
+        (l, b * s)).reshape(-1)
 
     def write(pool, new):
-        # pool (L,P,page,K,hd); new (L,B,S,K,hd)
-        flat_b = safe_page.reshape(-1)               # (B*S,)
-        flat_o = jnp.broadcast_to(off[None], (b, s)).reshape(-1)
-        upd = new.reshape(l, b * s, kh, hd).astype(pool.dtype)
-        # drop invalid writes by pointing them at a scratch page slot 0/0
-        # with where-masking the update against the existing value
-        cur = pool[:, flat_b, flat_o]
-        m = valid.reshape(1, b * s, 1, 1)
-        upd = jnp.where(m, upd, cur)
-        return pool.at[:, flat_b, flat_o].set(upd)
+        upd = new.reshape(l * b * s, kh, hd).astype(pool.dtype)
+        return pool.at[flat_page, flat_off].set(upd, mode="drop")
 
     return {"k": write(pools["k"], ks), "v": write(pools["v"], vs)}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page_size",
-                                             "use_pallas"))
-def decode_step_paged(params, pools, tables, lens, tokens, *,
-                      cfg: ModelConfig, page_size: int,
-                      use_pallas: bool = False):
-    """One decode step for the whole running batch.
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnames=("pools", "rng"))
+def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
+                  *, cfg: ModelConfig, page_size: int):
+    """Batched prefill: one padded forward for every admitted request.
 
-    tokens (B,1) int32 — last sampled token per row;
-    lens (B,) int32    — tokens already in cache (new token position);
-    tables (B, maxp)   — MMU block tables (row of -1s = inactive slot).
-    Returns (logits (B,V), new_pools).  Donate ``pools``.
+    tokens (N, S) int32 right-padded prompts; lens (N,) prompt lengths
+    (0 = padding row); tables (N, maxp) block tables for the freshly
+    allocated sequences; temperatures (N,).  Returns
+    (first_tokens (N,) int32, new_pools, new_rng).  ``pools`` and ``rng``
+    are donated; sampling happens on device (padding rows yield garbage
+    tokens the caller ignores).
     """
-    b = tokens.shape[0]
-    hd = cfg.resolved_head_dim
-    x = layers.embed_lookup(params["embed"], tokens)
+    _count_trace("prefill_paged")
+    n = tokens.shape[0]
+    hidden, _, kv_stack, _ = forward(params, cfg, tokens, collect_kv=True)
+    pools = write_prefill(pools, kv_stack, tables, lens, page_size)
+    last = hidden[jnp.arange(n), jnp.maximum(lens - 1, 0)]      # (N, D)
+    logits = lm_logits(params, cfg, last)[..., :cfg.vocab_size]
+    rng, sub = jax.random.split(rng)
+    first = sample_per_row(sub, logits, temperatures)
+    return first, pools, rng
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size",
+                                             "use_pallas",
+                                             "pages_per_block"),
+                   donate_argnames=("pools", "lens", "last_tokens", "rng"))
+def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
+                      temperatures, *, cfg: ModelConfig, page_size: int,
+                      use_pallas: bool = False,
+                      pages_per_block: Optional[int] = None):
+    """One fused decode step for the whole running batch.
+
+    last_tokens (B,) int32 — last sampled token per row;
+    lens (B,) int32       — tokens already in cache (new token position);
+    tables (B, maxp)      — MMU block tables (row of -1s = inactive slot);
+    temperatures (B,)     — per-row sampling temperature (<= 0 = greedy).
+
+    Returns (next_tokens (B,) int32, new_pools, new_lens, new_rng).
+    ``pools``, ``lens``, ``last_tokens`` and ``rng`` are donated: the
+    flat KV pools are an aliased carry of the layer scan, updated in
+    place.  ``tables`` is NOT donated — it is the MMU's cached device
+    view, reused across steps.  The only host<->device traffic a caller
+    needs per step is reading back the (B,) token vector.
+    """
+    _count_trace("decode_step_paged")
+    maxp = tables.shape[1]
+    n_flat = pools["k"].shape[0]
+    n_pages = n_flat // cfg.n_layers
+    x = layers.embed_lookup(params["embed"], last_tokens[:, None])
     pos = lens                                        # 0-based new position
-    vpage = pos // page_size
+    vpage = jnp.minimum(pos // page_size, maxp - 1)
     off = pos % page_size
     ppage = jnp.take_along_axis(tables, vpage[:, None], axis=1)[:, 0]
     active = ppage >= 0
-    safe_page = jnp.where(active, ppage, 0)
-    rows = jnp.arange(b)
+    kv_lens = jnp.where(active, lens + 1, 0)
 
-    def body(x, inp):
-        lp, kp, vp = inp                              # pool (P,page,K,hd)
+    def body(carry, inp):
+        x, kp, vp = carry
+        li, lp = inp
+        base = li * n_pages
         h = layers.norm_apply(lp["norm1"], x, cfg.norm_eps)
         q, k, v = attention.qkv_proj(lp["attn"], cfg, h)
         if cfg.pos_embed == "rope":
@@ -96,24 +170,35 @@ def decode_step_paged(params, pools, tables, lens, tokens, *,
             k = layers.apply_rope(k, pos[:, None], cfg.rope_theta)
         knew = k[:, 0].astype(kp.dtype)               # (B,K,hd)
         vnew = v[:, 0].astype(vp.dtype)
-        mask = active[:, None, None]
-        kp = kp.at[safe_page, off].set(
-            jnp.where(mask, knew, kp[safe_page, off]))
-        vp = vp.at[safe_page, off].set(
-            jnp.where(mask, vnew, vp[safe_page, off]))
-        att = paged_decode(q[:, 0], kp, vp, tables,
-                           jnp.where(active, lens + 1, 0),
-                           use_pallas=use_pallas)
+        # inactive rows write one past the pool end: dropped by "drop"
+        drop_page = jnp.where(active, base + ppage, n_flat)
+        kp = kp.at[drop_page, off].set(knew, mode="drop")
+        vp = vp.at[drop_page, off].set(vnew, mode="drop")
+        ltab = jnp.where(tables >= 0, tables + base, -1)
+        att = paged_decode(q[:, 0], kp, vp, ltab, kv_lens,
+                           use_pallas=use_pallas,
+                           pages_per_block=pages_per_block)
         x = x + attention.out_proj(lp["attn"], cfg, att[:, None])
         h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
         if _is_moe_layer(cfg):
             out, _ = moe.moe_apply(lp["ffn"], cfg, h)
         else:
             out = mlp.mlp_apply(lp["ffn"], cfg, h)
-        return x + out, (kp, vp)
+        return (x + out, kp, vp), None
 
-    x, (ks, vs) = jax.lax.scan(body, x,
-                               (params["layers"], pools["k"], pools["v"]))
+    (x, kpool, vpool), _ = jax.lax.scan(
+        body, (x, pools["k"], pools["v"]),
+        (jnp.arange(cfg.n_layers), params["layers"]))
     x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
-    logits = lm_logits(params, cfg, x)[:, 0]
-    return logits, {"k": ks, "v": vs}
+    logits = lm_logits(params, cfg, x)[:, 0][..., :cfg.vocab_size]
+    rng, sub = jax.random.split(rng)
+    # sample every row (the host ignores empty slots): a live row whose
+    # write-position page was evicted still emits a real (degraded)
+    # sample, matching the host-side oracle's behaviour under pressure.
+    next_tokens = sample_per_row(sub, logits, temperatures)
+    # lens mirrors the host's per-step append unconditionally, so an
+    # evicted row's write position keeps tracking host truth and the row
+    # self-reactivates once its next page is mapped (slot transitions
+    # reset the counters host-side).
+    new_lens = lens + 1
+    return next_tokens, {"k": kpool, "v": vpool}, new_lens, rng

@@ -45,6 +45,24 @@ def _apply_min_p(logits, mp: float):
     return jnp.where(probs < mp * top, -jnp.inf, logits)
 
 
+def sample_per_row(rng, logits, temperatures):
+    """Fused per-row sampling for the device-resident decode hot path.
+
+    logits (B, V) float; temperatures (B,) float — rows with
+    temperature <= 0 take the argmax, the rest draw via Gumbel-max
+    (argmax of logits/T + Gumbel noise == categorical(softmax(logits/T))).
+    Returns (B,) int32.  Not jitted on its own: it is traced inside
+    ``decode_step_paged``/``prefill_paged`` so logits never leave the
+    device and the PRNG key stays device-resident.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temperatures, 1e-6)[:, None].astype(jnp.float32)
+    g = jax.random.gumbel(rng, logits.shape, jnp.float32)
+    noisy = jnp.argmax(logits.astype(jnp.float32) / t + g,
+                       axis=-1).astype(jnp.int32)
+    return jnp.where(temperatures > 0, noisy, greedy)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def sample(rng, logits, cfg: SamplerConfig = SamplerConfig()):
     """logits (..., V) -> token ids (...,) int32."""

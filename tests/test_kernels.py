@@ -76,9 +76,11 @@ def _tables(b, page, maxp, npages, lens):
     return tables
 
 
+@pytest.mark.parametrize("ppb", [1, 2, None],
+                         ids=["ppb1", "ppb2", "ppbauto"])
 @pytest.mark.parametrize("case", PA_CASES,
                          ids=[f"pa{i}" for i in range(len(PA_CASES))])
-def test_paged_attention_matches_ref(case):
+def test_paged_attention_matches_ref(case, ppb):
     b, h, kh, d, page, maxp, npages = case
     ks = jax.random.split(jax.random.PRNGKey(2), 3)
     q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
@@ -87,10 +89,32 @@ def test_paged_attention_matches_ref(case):
     lens = np.minimum(np.arange(1, b + 1) * (page + 7), page * maxp)
     tables = _tables(b, page, maxp, npages, lens)
     out = paged_attention(q, kp, vp, jnp.asarray(tables),
-                          jnp.asarray(lens, jnp.int32), interpret=True)
+                          jnp.asarray(lens, jnp.int32),
+                          pages_per_block=ppb, interpret=True)
     ref = paged_attention_ref(q, kp, vp, jnp.asarray(tables),
                               jnp.asarray(lens, jnp.int32))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_attention_ragged_occupancy_page_groups():
+    """pages_per_block > 1 over ragged occupancy: an empty slot (all -1),
+    a length exactly on a page-group boundary, and a host-swapped page
+    (-1 mid-table) all match the oracle for every group width."""
+    b, h, kh, d, page, maxp, npages = 3, 4, 2, 64, 16, 7, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    kp = jax.random.normal(ks[1], (npages, page, kh, d), jnp.float32)
+    vp = jax.random.normal(ks[2], (npages, page, kh, d), jnp.float32)
+    lens = jnp.asarray([0, 32, 100], jnp.int32)
+    tables = np.full((b, maxp), -1, np.int32)
+    tables[1, :2] = [5, 9]
+    tables[2, :7] = [1, 2, 3, -1, 4, 6, 7]
+    ref = paged_attention_ref(q, kp, vp, jnp.asarray(tables), lens)
+    for ppb in (1, 2, 3, 4, None):        # 3: maxp not a group multiple
+        out = paged_attention(q, kp, vp, jnp.asarray(tables), lens,
+                              pages_per_block=ppb, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, err_msg=f"ppb={ppb}")
 
 
 def test_paged_matches_dense_attention():

@@ -185,6 +185,9 @@ def test_submit_io_bills_tenant():
     # regression: submit_io naming an existing tenant must NOT reset its
     # configured weight back to the default
     assert stats["weight"] == 1.5
+    # async submitters reconcile on this: nothing left in flight
+    assert shell.scheduler.tenant_pending("svc") == 0
+    assert shell.scheduler.tenant_pending("no-such-tenant") == 0
 
 
 def test_default_tenant_autocreated_per_slot():
