@@ -68,6 +68,7 @@ def _run_cell(weights: Tuple[float, ...], packet_bytes: int,
     clock = shell.static.pcie.clock
     shell.close()
     return {
+        "config": f"w{':'.join(f'{w:g}' for w in weights)}-pkt{packet_bytes >> 10}k",
         "tenants": n,
         "weights": ":".join(f"{w:g}" for w in weights),
         "packet_kb": packet_bytes >> 10,

@@ -47,8 +47,8 @@ SWEEP = [
 ]
 
 
-def _decode_throughput(cfg, params, *, batch: int, page: int,
-                       use_pallas: bool, new_tokens: int = 32) -> dict:
+def _decode_once(cfg, params, *, batch: int, page: int,
+                 use_pallas: bool, new_tokens: int) -> dict:
     rng = np.random.RandomState(0)
     mmu = MMU(MMUConfig(page_size=page, n_pages=2048))
     eng = ServingEngine(cfg, params, mmu, max_batch=batch, max_len=256,
@@ -75,6 +75,24 @@ def _decode_throughput(cfg, params, *, batch: int, page: int,
         "block_table_uploads": eng.block_table.row_uploads,
         "block_table_hits": eng.block_table.hits,
     }
+
+
+def _decode_throughput(cfg, params, *, batch: int, page: int,
+                       use_pallas: bool, new_tokens: int = 32,
+                       trials: int = 3) -> dict:
+    """Best-of-N decode cell: single-shot engine runs on a shared CPU are
+    ±20% noisy, which drowns the cross-PR trend signal the JSON artifact
+    exists for.  The interpret-mode Pallas cell runs once (it is slow and
+    its absolute number is not a trend metric)."""
+    if use_pallas:
+        trials = 1
+    best = None
+    for _ in range(trials):
+        row = _decode_once(cfg, params, batch=batch, page=page,
+                           use_pallas=use_pallas, new_tokens=new_tokens)
+        if best is None or row["tokens_per_s"] > best["tokens_per_s"]:
+            best = row
+    return best
 
 
 def run(new_tokens: int = 32):

@@ -36,6 +36,8 @@ SUITES = [
      "Fig 11: HLL with on-demand reconfiguration"),
     ("fig12_nn", "bench_nn_inference",
      "Fig 12: NN inference Coyote vs staged-copy"),
+    ("kernel_microbench", "bench_kernels",
+     "Kernel microbench: paged attention ref vs pallas"),
     ("llm_serving", "bench_serving",
      "LLM serving: decode tokens/s vs batch x page x kernel"),
     ("llm_serving_scaling", "bench_serving:run_scaling",
@@ -49,17 +51,21 @@ SUITES = [
 # suite name -> (json path, bench id) for machine-readable artifacts
 JSON_ARTIFACTS = {
     "llm_serving": ("BENCH_serving.json", "bench_serving"),
+    "scheduler_qos": ("BENCH_scheduler.json", "bench_scheduler"),
+    "kernel_microbench": ("BENCH_kernels.json", "bench_kernels"),
 }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters")
     args = ap.parse_args(argv)
+    filters = [f for f in args.only.split(",") if f]
 
     failures = 0
     for name, module, title in SUITES:
-        if args.only and args.only not in name:
+        if filters and not any(f in name for f in filters):
             continue
         t0 = time.perf_counter()
         try:

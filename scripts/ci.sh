@@ -15,6 +15,13 @@ else
   python -m pytest -x -q -m "not slow"
 fi
 
-# substring match: runs both llm_serving (sweep -> BENCH_serving.json)
-# and llm_serving_scaling (Fig 10b concurrency curve), ~40s total
-python -m benchmarks.run --only llm_serving
+# substring match: llm_serving runs both the sweep (-> BENCH_serving.json)
+# and llm_serving_scaling (Fig 10b concurrency curve); scheduler_qos and
+# kernel_microbench write BENCH_scheduler.json / BENCH_kernels.json
+python -m benchmarks.run --only llm_serving,scheduler_qos,kernel_microbench
+
+# trend check: diff the fresh artifacts against the previous PR's
+# committed versions (git show HEAD:...).  Informational, never gating —
+# pass --strict to make flagged regressions fail CI.
+python scripts/diff_bench.py BENCH_serving.json BENCH_scheduler.json \
+  BENCH_kernels.json

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Diff machine-readable bench artifacts against the previous PR's.
+
+    python scripts/diff_bench.py BENCH_serving.json [BENCH_*.json ...]
+
+The baseline for each file is the committed version at HEAD
+(``git show HEAD:<file>``) — i.e. the artifact the previous PR shipped.
+Rows are matched by their ``config`` key; the primary metric is
+``tokens_per_s`` when present (higher is better), else ``mean_s`` (lower
+is better).  Regressions beyond ``--warn-pct`` are flagged; the script
+always exits 0 (artifacts move with hardware — the diff is a trend
+signal, not a gate) unless ``--strict`` is given.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+
+def _load_current(path: str) -> Optional[List[Dict]]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _load_baseline(path: str) -> Optional[List[Dict]]:
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                             capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, json.JSONDecodeError, OSError):
+        return None
+
+
+# fallbacks for suites whose trend metric lives under "extra" (the
+# scheduler rows carry no timing — QoS error is their signal)
+_EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1))
+
+
+def _metric(row: Dict) -> Optional[tuple]:
+    tps = float(row.get("tokens_per_s", 0.0))
+    if tps > 0:
+        return "tokens_per_s", tps, +1          # higher is better
+    mean = float(row.get("mean_s", 0.0))
+    if mean > 0:
+        return "mean_s", mean, -1               # lower is better
+    extra = row.get("extra", {})
+    for key, sense in _EXTRA_METRICS:
+        if key in extra:
+            return key, float(extra[key]), sense
+    return None
+
+
+def diff_file(path: str, warn_pct: float) -> int:
+    cur = _load_current(path)
+    if cur is None:
+        print(f"[diff] {path}: missing or unreadable — run the bench "
+              "suite first")
+        return 0
+    base = _load_baseline(path)
+    print(f"\n## bench diff: {path}")
+    if base is None:
+        print(f"  no committed baseline at HEAD (new artifact, "
+              f"{len(cur)} rows) — nothing to diff")
+        return 0
+    base_by = {r["config"]: r for r in base if "config" in r}
+    regressions = 0
+    for row in cur:
+        cfgk = row.get("config")
+        if cfgk is None:
+            continue
+        b = base_by.pop(cfgk, None)
+        m = _metric(row)
+        if m is None:
+            print(f"  {cfgk:<28} (no comparable metric in row)")
+            continue
+        name, val, sense = m
+        if b is None:
+            print(f"  {cfgk:<28} NEW        {name}={val:.4g}")
+            continue
+        mb = _metric(b)
+        if mb is None or mb[0] != name:
+            print(f"  {cfgk:<28} metric changed "
+                  f"({mb[0] if mb else 'none'} -> {name}); not compared")
+            continue
+        bval = mb[1]
+        # near-zero baselines (e.g. ratio_err_pct == 0, perfect QoS) are
+        # compared on unit scale so the delta reads in absolute points
+        denom = abs(bval) if abs(bval) > 1e-9 else 1.0
+        delta = (val - bval) / denom * 100.0
+        worse = -delta * sense > warn_pct
+        flag = "  <-- REGRESSION" if worse else ""
+        regressions += int(worse)
+        print(f"  {cfgk:<28} {name}: {bval:.4g} -> {val:.4g} "
+              f"({delta:+.1f}%){flag}")
+    for cfgk in base_by:
+        print(f"  {cfgk:<28} REMOVED (was in previous artifact)")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--warn-pct", type=float, default=20.0,
+                    help="flag regressions beyond this percentage")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero when regressions are flagged")
+    args = ap.parse_args(argv)
+    total = sum(diff_file(f, args.warn_pct) for f in args.files)
+    if total:
+        print(f"\n[diff] {total} flagged regression(s) "
+              f"(> {args.warn_pct:.0f}%)")
+    return 1 if (total and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

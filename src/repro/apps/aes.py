@@ -10,6 +10,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro.core.port import PortCapabilities
 from repro.core.services import encryption as E
 from repro.core.services.base import ServiceRequirement
 from repro.core.vfpga import AppArtifact
@@ -51,4 +52,8 @@ def make_aes_artifact(mode: str = "ecb") -> AppArtifact:
     return AppArtifact(
         name=f"aes_{mode}", fn=fn,
         requires=[ServiceRequirement("encryption", {})],
-        config_repr={"mode": mode})
+        config_repr={"mode": mode},
+        capabilities=PortCapabilities(
+            name=f"aes_{mode}", kind="app", streams=1,
+            csr_map={"key_lo": CSR_KEY_LO, "key_hi": CSR_KEY_HI},
+            mem_model="host", ops=("local_transfer", "kernel")))

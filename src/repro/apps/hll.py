@@ -78,8 +78,13 @@ def hll_app_fn(iface, vfpga, data):
 
 
 def make_hll_artifact():
+    from repro.core.port import PortCapabilities
     from repro.core.services.base import ServiceRequirement
     from repro.core.vfpga import AppArtifact
     return AppArtifact(name="hll", fn=hll_app_fn,
                        requires=[ServiceRequirement("mmu", {})],
-                       config_repr=HLLConfig())
+                       config_repr=HLLConfig(),
+                       capabilities=PortCapabilities(
+                           name="hll", kind="app", streams=1, csr_map={},
+                           mem_model="host",
+                           ops=("local_transfer", "kernel")))

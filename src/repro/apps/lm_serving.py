@@ -21,11 +21,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.port import PortCapabilities
 from repro.core.services.base import ServiceRequirement
 from repro.core.vfpga import AppArtifact
 
 CSR_TEMPERATURE_MILLI = 0x10      # temperature * 1000
 CSR_MAX_NEW_TOKENS = 0x11
+CSR_TOP_K = 0x12                  # 0 = disabled
+CSR_TOP_P_MILLI = 0x13            # top_p * 1000; 0 or >=1000 = disabled
 
 
 class _EngineHolder:
@@ -57,10 +60,14 @@ class _EngineHolder:
         eng = self.engine(vfpga)
         temp = iface.csr.get_csr(CSR_TEMPERATURE_MILLI, 0) / 1000.0
         max_new = iface.csr.get_csr(CSR_MAX_NEW_TOKENS, 8)
+        top_k = iface.csr.get_csr(CSR_TOP_K, 0)
+        top_p_milli = iface.csr.get_csr(CSR_TOP_P_MILLI, 0)
+        top_p = top_p_milli / 1000.0 if 0 < top_p_milli < 1000 else 1.0
         toks = np.asarray(prompt).reshape(-1)
         toks = toks.view(np.int32) if toks.dtype == np.uint8 else toks
         rid = eng.submit([int(t) for t in toks if t > 0],
-                         max_new_tokens=int(max_new), temperature=temp)
+                         max_new_tokens=int(max_new), temperature=temp,
+                         top_k=int(top_k), top_p=top_p)
         while eng.pending():
             eng.step()
         req = next(r for r in eng.completed if r.rid == rid)
@@ -78,4 +85,11 @@ def make_lm_serving_artifact(cfg: ModelConfig, params, *,
         fn=holder,
         requires=[ServiceRequirement("mmu", {"min_page_size": 1})],
         config_repr={"arch": cfg.arch_id, "max_batch": max_batch,
-                     "max_len": max_len})
+                     "max_len": max_len},
+        capabilities=PortCapabilities(
+            name="lm_serving", kind="app", streams=max_batch,
+            csr_map={"temperature_milli": CSR_TEMPERATURE_MILLI,
+                     "max_new_tokens": CSR_MAX_NEW_TOKENS,
+                     "top_k": CSR_TOP_K,
+                     "top_p_milli": CSR_TOP_P_MILLI},
+            mem_model="paged", ops=("kernel",)))

@@ -23,8 +23,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.interfaces import Oper
+from repro.core.port import Invocation, PortCapabilities
 from repro.core.services.base import ServiceRequirement
 from repro.core.vfpga import AppArtifact
+
+
+CSR_NN_BATCH = 0x20               # serving batch size for the stream loop
 
 
 @dataclass(frozen=True)
@@ -63,42 +68,72 @@ class CoyoteOverlay:
         self.cfg = cfg
         self.params = init_mlp(jax.random.PRNGKey(seed), cfg)
         self._compiled = None
+        self._port = None
 
     def program_fpga(self, *, warm_batch: int = 256) -> Dict[str, float]:
         """Load the NN as a vFPGA app (partial reconfiguration) and
         AOT-warm the executable for the serving batch size."""
-        art = AppArtifact(
-            name="nn_inference", fn=lambda iface, vf, x: self._predict_dev(x),
-            weights=self.params,
-            requires=[ServiceRequirement("mmu", {})],
-            config_repr=self.cfg)
+        art = make_nn_artifact(self)
         stats = self.shell.load_app(self.slot, art)
         vf = self.shell.vfpgas[self.slot]
         self._compiled = jax.jit(mlp_apply)
         warm = jnp.zeros((warm_batch, self.cfg.d_in), jnp.float32)
         self._compiled(vf.device_weights, warm).block_until_ready()
+        self._port = self.shell.attach(self.slot)
+        vf.iface.csr.set_csr(warm_batch, CSR_NN_BATCH)
         return stats
 
     def _predict_dev(self, x):
         vf = self.shell.vfpgas[self.slot]
         return self._compiled(vf.device_weights, x)
 
-    def predict(self, X: np.ndarray, out_shape=(1,),
-                batch_size: int = 256) -> np.ndarray:
-        """Streamed inference: upload batch i+1 while batch i computes."""
-        vf = self.shell.vfpgas[self.slot]
-        n = X.shape[0]
+    def _predict_stream(self, iface, X: np.ndarray) -> np.ndarray:
+        """The user logic's stream loop: upload batch i+1 while batch i
+        computes (async dispatch), one sync per completed batch."""
+        batch_size = max(iface.csr.get_csr(CSR_NN_BATCH, 256), 1)
         outs = []
         pending = None
-        for i in range(0, n, batch_size):
-            xb = jnp.asarray(X[i:i + batch_size])     # async H2D stream
-            y = self._compiled(vf.device_weights, xb)  # async dispatch
+        for i in range(0, X.shape[0], batch_size):
+            xb = jnp.asarray(X[i:i + batch_size])      # async H2D stream
+            y = self._predict_dev(xb)                  # async dispatch
             if pending is not None:
                 outs.append(np.asarray(pending))       # sync previous
             pending = y
         if pending is not None:
             outs.append(np.asarray(pending))
         return np.concatenate(outs, axis=0)
+
+    def predict(self, X: np.ndarray, out_shape=(1,),
+                batch_size: int = 256) -> np.ndarray:
+        """One KERNEL invocation through the unified port per predict
+        call; the pipelined stream loop runs inside the app logic (the
+        batch size is a CSR, like any other slot control knob)."""
+        from repro.core.interfaces import SgEntry
+        vf = self.shell.vfpgas[self.slot]
+        vf.iface.csr.set_csr(batch_size, CSR_NN_BATCH)
+        comp = self._port.submit(Invocation.from_sg(SgEntry(
+            src=X, length=int(X.nbytes),
+            opcode=Oper.KERNEL))).result(timeout=120.0)
+        if not comp.ok:
+            raise comp.result
+        return np.asarray(comp.result)
+
+
+def make_nn_artifact(overlay: "CoyoteOverlay") -> AppArtifact:
+    def fn(iface, vf, x):
+        x = np.asarray(x)
+        if x.ndim == 2:                     # full stream: pipelined loop
+            return overlay._predict_stream(iface, x)
+        return overlay._predict_dev(jnp.asarray(x))
+    return AppArtifact(
+        name="nn_inference", fn=fn,
+        weights=overlay.params,
+        requires=[ServiceRequirement("mmu", {})],
+        config_repr=overlay.cfg,
+        capabilities=PortCapabilities(
+            name="nn_inference", kind="app", streams=1,
+            csr_map={"batch_size": CSR_NN_BATCH},
+            mem_model="device", ops=("kernel",)))
 
 
 class StagedCopyBaseline:

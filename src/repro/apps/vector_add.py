@@ -9,6 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.interfaces import Packet
+from repro.core.port import PortCapabilities
 from repro.core.vfpga import AppArtifact
 
 
@@ -29,7 +30,11 @@ def vector_add_app(iface, vfpga, a, b=None):
 
 def make_vector_add_artifact() -> AppArtifact:
     return AppArtifact(name="vector_add", fn=vector_add_app,
-                       config_repr={"streams": 2})
+                       config_repr={"streams": 2},
+                       capabilities=PortCapabilities(
+                           name="vector_add", kind="app", streams=2,
+                           csr_map={}, mem_model="host",
+                           ops=("local_transfer", "kernel")))
 
 
 def passthrough_app(iface, vfpga, x):
@@ -38,4 +43,8 @@ def passthrough_app(iface, vfpga, x):
 
 def make_passthrough_artifact() -> AppArtifact:
     return AppArtifact(name="passthrough", fn=passthrough_app,
-                       config_repr={})
+                       config_repr={},
+                       capabilities=PortCapabilities(
+                           name="passthrough", kind="app", streams=1,
+                           csr_map={}, mem_model="host",
+                           ops=("local_transfer", "kernel")))

@@ -6,6 +6,8 @@ sharing, run-time reconfiguration, and a unified multi-stream interface.
 """
 from repro.core.cthread import Alloc, CThread
 from repro.core.interfaces import (AppInterface, Completion, Oper, SgEntry)
+from repro.core.port import (Invocation, Port, PortCapabilities, PortFuture,
+                             PortState, ServicePort, VFpgaPort)
 from repro.core.scheduler import ShellScheduler, Tenant
 from repro.core.shell import BuildReport, Shell, ShellConfig
 from repro.core.static_layer import StaticLayer, TransferEngine
@@ -13,6 +15,8 @@ from repro.core.vfpga import AppArtifact, VFpga
 
 __all__ = [
     "Alloc", "CThread", "AppInterface", "Completion", "Oper", "SgEntry",
+    "Invocation", "Port", "PortCapabilities", "PortFuture", "PortState",
+    "ServicePort", "VFpgaPort",
     "BuildReport", "Shell", "ShellConfig", "ShellScheduler", "StaticLayer",
     "Tenant", "TransferEngine", "AppArtifact", "VFpga",
 ]

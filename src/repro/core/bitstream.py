@@ -1,0 +1,148 @@
+"""Safe, versioned "partial bitstream" container (no pickle).
+
+Layout of a bitstream blob:
+
+    +--------+---------+------------+-------------------+--------------+
+    | b"CYBS"| u16 ver | u32 hlen   | JSON header (hlen)| npz payload  |
+    +--------+---------+------------+-------------------+--------------+
+
+The JSON header carries all metadata (kind, artifact version, config,
+requirements, ...) plus a JSON-encoded *skeleton* of the weight pytree in
+which every array leaf is replaced by ``{"__leaf__": i}``; leaf ``i`` is
+stored as entry ``a<i>`` of the trailing npz archive (loaded with
+``allow_pickle=False``).  Nothing in the format can execute code on load —
+the replacement for the previous pickle-based serialization.
+
+Unknown magic, container version, or ``kind`` raise
+:class:`BitstreamError` with a clear message instead of deserializing.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"CYBS"
+FORMAT_VERSION = 1
+KNOWN_KINDS = ("shell", "app", "raw")
+
+_HDR = struct.Struct("<HI")         # (format_version, header_len)
+
+
+class BitstreamError(ValueError):
+    """Malformed, unknown-kind, or unknown-version bitstream."""
+
+
+# ------------------------------------------------------- pytree skeleton ---
+def _encode_tree(x: Any, leaves: List[np.ndarray]) -> Any:
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if hasattr(x, "__array__") or isinstance(x, (np.ndarray, np.generic)):
+        leaves.append(np.asarray(x))
+        return {"__leaf__": len(leaves) - 1}
+    if isinstance(x, dict):
+        if any(not isinstance(k, str) for k in x):
+            raise BitstreamError(
+                "bitstream trees require string dict keys, got "
+                f"{sorted(map(repr, x))[:3]}")
+        return {"__dict__": {k: _encode_tree(v, leaves)
+                             for k, v in x.items()}}
+    if isinstance(x, (list, tuple)):
+        tag = "__list__" if isinstance(x, list) else "__tuple__"
+        return {tag: [_encode_tree(v, leaves) for v in x]}
+    raise BitstreamError(
+        f"unsupported type in bitstream tree: {type(x).__name__} "
+        "(allowed: arrays, dict/list/tuple, JSON scalars)")
+
+
+def _decode_tree(x: Any, leaves: Dict[str, np.ndarray]) -> Any:
+    if isinstance(x, dict):
+        if "__leaf__" in x:
+            return leaves[f"a{x['__leaf__']}"]
+        if "__dict__" in x:
+            return {k: _decode_tree(v, leaves)
+                    for k, v in x["__dict__"].items()}
+        if "__list__" in x:
+            return [_decode_tree(v, leaves) for v in x["__list__"]]
+        if "__tuple__" in x:
+            return tuple(_decode_tree(v, leaves) for v in x["__tuple__"])
+        raise BitstreamError(f"malformed tree node: {sorted(x)}")
+    return x
+
+
+# ------------------------------------------------------------- container ---
+def encode(kind: str, header: Dict[str, Any],
+           arrays: Any = None) -> bytes:
+    """Serialize one bitstream.  ``header`` must be JSON-serializable;
+    ``arrays`` is an optional pytree of array leaves."""
+    if kind not in KNOWN_KINDS:
+        raise BitstreamError(
+            f"unknown bitstream kind {kind!r} (known: {KNOWN_KINDS})")
+    leaves: List[np.ndarray] = []
+    skeleton = _encode_tree(arrays, leaves)
+    doc = {"kind": kind, "header": header, "arrays": skeleton}
+    try:
+        hjson = json.dumps(doc, sort_keys=True).encode("utf-8")
+    except TypeError as e:
+        raise BitstreamError(f"bitstream header is not JSON-safe: {e}")
+    bio = io.BytesIO()
+    np.savez(bio, **{f"a{i}": leaf for i, leaf in enumerate(leaves)})
+    return MAGIC + _HDR.pack(FORMAT_VERSION, len(hjson)) + hjson \
+        + bio.getvalue()
+
+
+def decode(blob: bytes, *, expect_kind: Optional[str] = None
+           ) -> Tuple[str, Dict[str, Any], Any]:
+    """Parse a bitstream blob -> (kind, header, arrays).
+
+    Rejects bad magic, container versions newer than this reader, and
+    unknown/unexpected kinds with a :class:`BitstreamError`.
+    """
+    if len(blob) < len(MAGIC) + _HDR.size or blob[:len(MAGIC)] != MAGIC:
+        raise BitstreamError(
+            "not a Coyote bitstream (bad magic; refusing to deserialize "
+            "legacy pickle blobs)")
+    ver, hlen = _HDR.unpack_from(blob, len(MAGIC))
+    if ver > FORMAT_VERSION:
+        raise BitstreamError(
+            f"bitstream container version {ver} is newer than this "
+            f"reader (supports <= {FORMAT_VERSION}); refusing to load")
+    off = len(MAGIC) + _HDR.size
+    try:
+        doc = json.loads(blob[off:off + hlen].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise BitstreamError(f"corrupt bitstream header: {e}")
+    kind = doc.get("kind")
+    if kind not in KNOWN_KINDS:
+        raise BitstreamError(
+            f"unknown bitstream kind {kind!r} (known: {KNOWN_KINDS}); "
+            "refusing to load")
+    if expect_kind is not None and kind != expect_kind:
+        raise BitstreamError(
+            f"expected a {expect_kind!r} bitstream, got {kind!r}")
+    arrays = None
+    if doc.get("arrays") is not None:
+        npz = np.load(io.BytesIO(blob[off + hlen:]), allow_pickle=False)
+        arrays = _decode_tree(doc["arrays"], npz)
+    return kind, doc.get("header", {}), arrays
+
+
+def jsonable(x: Any) -> Any:
+    """Best-effort JSON projection for free-form config metadata
+    (``config_repr`` etc.): dataclasses become dicts, unknown objects
+    their repr.  Lossy by design — config_repr is cache-key material,
+    not executable state."""
+    import dataclasses
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return {k: jsonable(v)
+                for k, v in dataclasses.asdict(x).items()}
+    if isinstance(x, dict):
+        return {str(k): jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [jsonable(v) for v in x]
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    return repr(x)

@@ -154,13 +154,19 @@ class RRArbiter:
         self.delivered: Dict[str, int] = {}
         self.completions: List[Tuple[str, float, int]] = []
 
+    def _effective_packet_bytes(self, nbytes: int) -> int:
+        """Descriptor size for one request.  Plain RR moves exactly one
+        packet per visit, so its equal-bandwidth guarantee requires a
+        uniform packet size — no scaling here."""
+        return self.packet_bytes
+
     def submit(self, requester: str, nbytes: int, *, tag: str = "",
                on_done: Optional[Callable[[float], None]] = None) -> None:
         if requester not in self._queues:
             self._queues[requester] = deque()
             self._order.append(requester)
             self.delivered.setdefault(requester, 0)
-        pkts = deque(packetize(nbytes, self.packet_bytes))
+        pkts = deque(packetize(nbytes, self._effective_packet_bytes(nbytes)))
         self._queues[requester].append(_Request(
             requester=requester, packets=pkts, tag=tag, on_done=on_done,
             t_enqueue=self.link.clock, bytes_total=nbytes))
@@ -218,12 +224,27 @@ class WeightedRRArbiter(RRArbiter):
     Idle requesters forfeit their deficit: no banking bandwidth while
     the queue is empty (standard DWRR)."""
 
+    # bound on descriptors per request, like a DMA descriptor ring: very
+    # large transfers ride proportionally larger bursts instead of tens
+    # of thousands of per-packet Python iterations.  Safe under DWRR
+    # because arbitration is byte-deficit-based: a big packet just waits
+    # more visits for its deficit, so weighted byte shares are unchanged.
+    # Transfers under MAX_PACKETS * packet_bytes (1 MB at the 4 KB
+    # default) keep exact per-packet granularity, so sniffer-event and
+    # per-packet fairness semantics are unchanged where observable.
+    MAX_PACKETS_PER_REQUEST = 256
+
     def __init__(self, link: Link, packet_bytes: int = DEFAULT_PACKET_BYTES,
                  default_weight: float = 1.0):
         super().__init__(link, packet_bytes=packet_bytes)
         self.default_weight = default_weight
         self._weights: Dict[str, float] = {}
         self._deficit: Dict[str, float] = {}
+
+    def _effective_packet_bytes(self, nbytes: int) -> int:
+        if nbytes > self.MAX_PACKETS_PER_REQUEST * self.packet_bytes:
+            return -(-nbytes // self.MAX_PACKETS_PER_REQUEST)
+        return self.packet_bytes
 
     def set_weight(self, requester: str, weight: float) -> None:
         if weight <= 0:

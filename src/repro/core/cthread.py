@@ -78,39 +78,31 @@ class CThread:
         return self.vfpga.iface.csr.get_csr(reg)
 
     # -- invocation ------------------------------------------------------------------
+    @property
+    def port(self):
+        """The slot's unified Port (the v2 submission surface)."""
+        return self.vfpga.attach_port()
+
     def invoke(self, oper: Oper, sg: SgEntry, *,
                wait: bool = True,
                timeout: Optional[float] = None) -> Optional[Completion]:
+        """Deprecated shim over ``port.submit`` (Port API v2).
+
+        Builds an :class:`~repro.core.port.Invocation` from the SG entry
+        and routes it through the slot's port — the scheduler still
+        batches, credits, and arbitrates, and completions still land on
+        the legacy completion queues.  New code should call
+        ``shell.attach(slot).submit(...)`` directly and keep the future.
+        """
+        from repro.core.port import Invocation
         sg.opcode = oper
         sg.tid = self.tid
-        sq = (self.vfpga.iface.sq_write
-              if oper in (Oper.LOCAL_OFFLOAD, Oper.REMOTE_WRITE)
-              else self.vfpga.iface.sq_read)
-        ticket = sq.submit(sg)
-        self._pending[ticket] = time.perf_counter()
-        # In the full shell, kick hands the entry to the async scheduler
-        # (batching + weighted credits + arbiter on its own thread) and the
-        # completion queue provides synchronization; standalone slots
-        # execute inline.
-        shell = getattr(self.vfpga, "shell", None)
-        if shell is not None:
-            shell.kick(self.vfpga.slot)
-        else:
-            item = sq.pop(timeout=0)
-            if item is not None:
-                t, s = item
-                comp = self.vfpga.execute_sg(t, s)
-                cq = (self.vfpga.iface.cq_write
-                      if oper in (Oper.LOCAL_OFFLOAD, Oper.REMOTE_WRITE)
-                      else self.vfpga.iface.cq_read)
-                cq.complete(comp)
+        fut = self.port.submit(Invocation.from_sg(sg))
+        self._pending[fut.ticket] = time.perf_counter()
         if not wait:
             return None
-        cq = (self.vfpga.iface.cq_write
-              if oper in (Oper.LOCAL_OFFLOAD, Oper.REMOTE_WRITE)
-              else self.vfpga.iface.cq_read)
-        comp = cq.wait(ticket, timeout=timeout)
-        self._pending.pop(ticket, None)
+        comp = fut.completion(timeout=timeout)
+        self._pending.pop(fut.ticket, None)
         return comp
 
     # -- interrupts --------------------------------------------------------------------

@@ -209,6 +209,17 @@ class CompletionQueue:
             self._by_ticket[c.ticket] = c
         self._q.put(c)
 
+    def writeback(self, c: Completion) -> None:
+        """Record a completion in the host-visible writeback counter
+        WITHOUT retaining the record.  Port-mediated submissions use
+        this: their synchronization object is the PortFuture, so parking
+        the Completion in the queue as well would leak one record per
+        invocation (nothing ever ``wait()``s for it) and its ticket (a
+        per-port counter) could shadow a SendQueue ticket for legacy
+        ``wait(ticket)`` callers on the same queue."""
+        with self._lock:
+            self.writeback_counter += 1
+
     def wait(self, ticket: Optional[int] = None,
              timeout: Optional[float] = None) -> Optional[Completion]:
         if ticket is None:

@@ -1,0 +1,483 @@
+"""Port API v2: ONE typed async interface for every vFPGA slot (§7.1).
+
+Coyote v2's core claim is a *unified logic interface*: services and user
+logic present the same bundle, which is what makes partial reconfiguration
+and multi-tenancy composable.  Before this module the repro had three
+divergent call paths — ``CThread.invoke`` sg-lists into send queues,
+``ShellScheduler.submit_io`` for the serving engine's decode I/O, and
+direct Python method calls into ``core/services/*``.  A :class:`Port`
+collapses them into one surface:
+
+    port = shell.attach(slot_or_service_name)       # capability handshake
+    fut  = port.submit(Invocation(...))             # async, TID-multiplexed
+    comp = fut.result(timeout)                      # Completion record
+
+Every submission — app scatter-gather work, service method calls, raw
+decode-step I/O — is credit-billed through the shell scheduler under the
+port's tenant and lands back on the slot's completion queue, so QoS
+accounting and synchronization are uniform across slot kinds.
+
+Drain-aware lifecycle (the reconfiguration story): a port is ACTIVE,
+DRAINING, or QUIESCED.  ``quiesce()`` stops intake (new submissions are
+*held*, not rejected), awaits the in-flight tail, and freezes the slot;
+``snapshot()``/``restore()`` move the CSR file and host address map across
+a swap; ``resume()`` replays held invocations in FIFO order against the
+newly loaded logic.  ``Shell.reconfigure(slot, bitstream)`` composes these
+into hot-swap with zero lost or duplicated completions.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+# builtin TimeoutError only aliases this from Python 3.11 on
+from concurrent.futures import TimeoutError as FuturesTimeoutError
+from dataclasses import asdict, dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.interfaces import Completion, Oper, SgEntry
+
+
+class PortState(Enum):
+    ACTIVE = "active"
+    DRAINING = "draining"      # intake held, in-flight completing
+    QUIESCED = "quiesced"      # no in-flight work; safe to swap the slot
+
+
+@dataclass(frozen=True)
+class PortCapabilities:
+    """Capability descriptor registered at ``Shell.attach()``.
+
+    The software analogue of the paper's interface bundle: how many
+    parallel streams the logic exposes, its memory-mapped control
+    registers (by name), and which memory model its state lives under.
+    """
+    name: str
+    kind: str = "app"                      # app | service
+    streams: int = 0
+    csr_map: Mapping[str, int] = field(default_factory=dict)
+    mem_model: str = "host"                # host | paged | device | none
+    ops: Tuple[str, ...] = ()              # Oper values / service methods
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = asdict(self)
+        d["csr_map"] = dict(self.csr_map)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PortCapabilities":
+        return cls(name=d["name"], kind=d.get("kind", "app"),
+                   streams=d.get("streams", 0),
+                   csr_map=dict(d.get("csr_map", {})),
+                   mem_model=d.get("mem_model", "host"),
+                   ops=tuple(d.get("ops", ())))
+
+
+@dataclass
+class Invocation:
+    """One typed unit of work submitted to a port.
+
+    ``kind`` selects the datapath:
+      * ``"sg"``     — scatter-gather descriptor against the slot's user
+                       logic (the ``CThread.invoke`` path);
+      * ``"io"``     — raw link I/O with no execution behind it (the
+                       serving engine's decode-step billing path);
+      * ``"method"`` — a named operation on a service port, with
+                       ``args``/``kwargs``.
+    """
+    kind: str = "sg"
+    op: Oper = Oper.KERNEL
+    sg: Optional[SgEntry] = None
+    method: str = ""
+    args: Tuple[Any, ...] = ()
+    kwargs: Dict[str, Any] = field(default_factory=dict)
+    nbytes: int = 0
+    stream: int = 0
+    tid: int = 0
+    tenant: Optional[str] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+    ticket: int = -1                        # assigned by the port
+
+    @classmethod
+    def from_sg(cls, sg: SgEntry) -> "Invocation":
+        return cls(kind="sg", op=sg.opcode, sg=sg, nbytes=max(sg.length, 1),
+                   stream=sg.src_stream, tid=sg.tid)
+
+    @classmethod
+    def io(cls, nbytes: int, *, stream: int = 0, tag: str = "io",
+           tenant: Optional[str] = None) -> "Invocation":
+        return cls(kind="io", op=Oper.LOCAL_TRANSFER, nbytes=max(nbytes, 1),
+                   stream=stream, tenant=tenant, meta={"tag": tag})
+
+    @classmethod
+    def call(cls, method: str, *args: Any, nbytes: int = 0,
+             **kwargs: Any) -> "Invocation":
+        return cls(kind="method", method=method, args=args, kwargs=kwargs,
+                   nbytes=nbytes)
+
+    def to_sg(self) -> SgEntry:
+        if self.sg is not None:
+            return self.sg
+        return SgEntry(length=self.nbytes, src_stream=self.stream,
+                       tid=self.tid, opcode=self.op, meta=dict(self.meta))
+
+
+class PortFuture(Future):
+    """Future[Completion] with the originating invocation attached."""
+
+    def __init__(self, invocation: Invocation):
+        super().__init__()
+        self.invocation = invocation
+
+    @property
+    def ticket(self) -> int:
+        return self.invocation.ticket
+
+    def completion(self, timeout: Optional[float] = None
+                   ) -> Optional[Completion]:
+        """``result()`` that returns None on timeout (legacy contract)."""
+        try:
+            return self.result(timeout=timeout)
+        except FuturesTimeoutError:
+            return None
+
+
+class PortError(RuntimeError):
+    pass
+
+
+class Port:
+    """Base port: state machine, in-flight tracking, hold-and-replay.
+
+    Subclasses implement ``_dispatch(inv, fut)`` (route one invocation
+    into their datapath, eventually calling ``_finish``), plus
+    ``capabilities()`` and the ``snapshot()``/``restore()`` pair.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._state = PortState.ACTIVE
+        self._tickets = itertools.count()
+        self._inflight: Dict[int, PortFuture] = {}
+        self._held: List[Tuple[Invocation, PortFuture]] = []
+        self.submitted = 0
+        self.completed = 0
+        self.replayed = 0
+        self.held_peak = 0
+        self._closed = False
+
+    # ------------------------------------------------------------ intake ---
+    @property
+    def state(self) -> PortState:
+        return self._state
+
+    def submit(self, inv: Invocation) -> PortFuture:
+        """Submit one invocation; returns a Future[Completion].
+
+        Never blocks on the slot itself: while the port drains or sits
+        quiesced across a reconfiguration, submissions are held and
+        replayed (FIFO) on ``resume()`` — callers just see a future that
+        resolves after the swap.
+        """
+        fut = PortFuture(inv)
+        with self._lock:
+            if self._closed:
+                raise PortError(
+                    f"port {self.name!r} is closed (its slot/service was "
+                    "torn down, e.g. by cold_restart); re-attach through "
+                    "Shell.attach() for a live port")
+            if inv.ticket < 0:
+                inv.ticket = next(self._tickets)
+            self.submitted += 1
+            if self._state is not PortState.ACTIVE:
+                self._held.append((inv, fut))
+                self.held_peak = max(self.held_peak, len(self._held))
+                return fut
+            self._inflight[inv.ticket] = fut
+        self._dispatch(inv, fut)
+        return fut
+
+    def call(self, inv: Invocation,
+             timeout: Optional[float] = None) -> Completion:
+        """Synchronous convenience: submit and wait."""
+        comp = self.submit(inv).result(timeout=timeout)
+        return comp
+
+    # ------------------------------------------------------- completion ----
+    def _finish(self, inv: Invocation, fut: PortFuture,
+                comp: Completion) -> None:
+        with self._lock:
+            self._inflight.pop(inv.ticket, None)
+            self.completed += 1
+            self._cv.notify_all()
+        if not fut.done():               # a future resolves exactly once
+            fut.set_result(comp)
+
+    def close(self) -> None:
+        """Permanently invalidate the port (its backing slot/service is
+        gone).  Held invocations fail fast rather than dispatch against
+        a dead object."""
+        with self._lock:
+            self._closed = True
+            held, self._held = self._held, []
+        for inv, fut in held:
+            if not fut.done():
+                fut.set_exception(PortError(
+                    f"port {self.name!r} closed while invocation "
+                    f"{inv.ticket} was held"))
+
+    def inflight(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    def held(self) -> int:
+        with self._lock:
+            return len(self._held)
+
+    # ------------------------------------------------- drain / hot-swap ----
+    def quiesce(self, timeout: Optional[float] = 30.0) -> bool:
+        """Stop intake and wait for every in-flight completion.
+
+        Idempotent; returns True once the port is QUIESCED.  On timeout
+        the port stays DRAINING (intake still held) and False is
+        returned — the caller decides whether to resume or abort.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._lock:
+            if self._state is PortState.QUIESCED and not self._inflight:
+                return True
+            self._state = PortState.DRAINING
+            while self._inflight:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(timeout=remaining if remaining else 0.25)
+            self._state = PortState.QUIESCED
+            return True
+
+    def resume(self) -> int:
+        """Replay held invocations in FIFO order, then reopen intake.
+        Returns the number of replayed invocations.
+
+        Intake flips to ACTIVE only once the held list is empty under
+        the lock — a submission racing with the replay is held and
+        drained by the next loop iteration, so no new invocation can
+        overtake an older held one.
+        """
+        replayed = 0
+        while True:
+            with self._lock:
+                if not self._held:
+                    self._state = PortState.ACTIVE
+                    return replayed
+                held, self._held = self._held, []
+                for inv, fut in held:
+                    self._inflight[inv.ticket] = fut
+            for inv, fut in held:
+                self.replayed += 1
+                replayed += 1
+                self._dispatch(inv, fut)
+
+    # ------------------------------------------------------------ hooks ----
+    def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
+        raise NotImplementedError
+
+    def capabilities(self) -> PortCapabilities:
+        raise NotImplementedError
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {}
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        pass
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "state": self._state.value,
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "inflight": len(self._inflight),
+                "held": len(self._held),
+                "replayed": self.replayed,
+            }
+
+
+class VFpgaPort(Port):
+    """The port of one application slot (user logic behind the unified
+    interface).  SG work executes via ``VFpga.execute_sg`` under the shell
+    scheduler (weighted credits + DWRR arbiter); completions land on the
+    slot's read/write completion queues exactly as before, so legacy
+    ticket-waiters and writeback counters keep working."""
+
+    def __init__(self, vfpga: Any):
+        super().__init__(f"vfpga{vfpga.slot}")
+        self.vfpga = vfpga
+
+    # ---------------------------------------------------------- dispatch ---
+    def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
+        vf = self.vfpga
+        shell = getattr(vf, "shell", None)
+        if inv.kind == "io":
+            self._dispatch_io(inv, fut, shell)
+            return
+        sg = inv.to_sg()
+        write_side = inv.op in (Oper.LOCAL_OFFLOAD, Oper.REMOTE_WRITE)
+        cq = vf.iface.cq_write if write_side else vf.iface.cq_read
+
+        def complete(comp: Completion, inv=inv, fut=fut, cq=cq) -> None:
+            cq.writeback(comp)           # counter only; the future is the
+            self._finish(inv, fut, comp)  # synchronization object
+
+        if shell is None:
+            complete(vf.execute_sg(inv.ticket, sg))
+        else:
+            shell.scheduler.submit(
+                slot=vf.slot, stream=sg.src_stream, ticket=inv.ticket,
+                sg=sg, execute=vf.execute_sg, complete=complete,
+                tenant=inv.tenant)
+
+    def _dispatch_io(self, inv: Invocation, fut: PortFuture, shell) -> None:
+        t0 = time.perf_counter()
+
+        def done(inv=inv, fut=fut, t0=t0) -> None:
+            self._finish(inv, fut, Completion(
+                ticket=inv.ticket, tid=inv.tid, opcode=Oper.LOCAL_TRANSFER,
+                nbytes=inv.nbytes, t_submit=t0,
+                t_done=time.perf_counter()))
+
+        if shell is None:
+            done()
+            return
+        shell.scheduler.submit_io(
+            inv.nbytes, slot=self.vfpga.slot, stream=inv.stream,
+            tenant=inv.tenant, tag=inv.meta.get("tag", "io"),
+            wait=False, on_done=done)
+
+    # ------------------------------------------------------ capabilities ---
+    def capabilities(self) -> PortCapabilities:
+        vf = self.vfpga
+        art = vf.app
+        if art is not None and getattr(art, "capabilities", None) is not None:
+            caps = art.capabilities
+            # slot-qualify the artifact's descriptor
+            return PortCapabilities(
+                name=self.name, kind="app", streams=caps.streams,
+                csr_map=dict(caps.csr_map), mem_model=caps.mem_model,
+                ops=caps.ops)
+        return PortCapabilities(
+            name=self.name, kind="app", streams=vf.iface.n_streams,
+            csr_map={}, mem_model="host",
+            ops=tuple(o.value for o in (Oper.LOCAL_TRANSFER, Oper.KERNEL,
+                                        Oper.LOCAL_OFFLOAD,
+                                        Oper.LOCAL_SYNC)))
+
+    # ------------------------------------------------- snapshot / restore --
+    def snapshot(self) -> Dict[str, Any]:
+        """Freeze swap-surviving slot state: the CSR file and the cThread
+        host address map (getMem buffers outlive the logic they feed)."""
+        vf = self.vfpga
+        return {
+            "csr": vf.iface.csr.snapshot(),
+            "addr_map": dict(vf._addr_map),
+            "next_vaddr": vf._next_vaddr,
+            "app": vf.app.name if vf.app else None,
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        vf = self.vfpga
+        for reg, val in snap.get("csr", {}).items():
+            vf.iface.csr.set_csr(val, reg)
+        vf._addr_map.update(snap.get("addr_map", {}))
+        vf._next_vaddr = max(vf._next_vaddr,
+                             snap.get("next_vaddr", vf._next_vaddr))
+
+
+# Synthetic "slot" ids for service ports: services are not application
+# slots, but billing through the scheduler wants a stable requester key.
+SERVICE_SLOT_BASE = 1000
+
+
+class ServicePort(Port):
+    """Port over a dynamic-layer service: ``submit(Invocation.call(...))``
+    runs one of the service's declared ``PORT_METHODS`` through the shell
+    scheduler (so service control traffic is credit-billed like any other
+    tenant traffic) and resolves with a Completion carrying the result."""
+
+    def __init__(self, service: Any, *, shell: Any = None,
+                 slot: int = SERVICE_SLOT_BASE,
+                 tenant: Optional[str] = None):
+        super().__init__(service.NAME)
+        self.service = service
+        self.shell = shell
+        self.slot = slot
+        self.tenant = tenant or f"svc.{service.NAME}"
+
+    def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
+        svc = self.service
+        allowed = getattr(svc, "PORT_METHODS", ())
+        if inv.kind != "method" or inv.method not in allowed:
+            # reject BEFORE billing: a disallowed call must not acquire
+            # credits or burn an arbiter visit
+            self._finish(inv, fut, Completion(
+                ticket=inv.ticket, tid=inv.tid, opcode=Oper.KERNEL,
+                nbytes=0, t_submit=time.perf_counter(),
+                t_done=time.perf_counter(), ok=False,
+                result=PortError(
+                    f"service {svc.NAME!r} port does not expose "
+                    f"{inv.method!r} (allowed: {sorted(allowed)})")))
+            return
+
+        def execute(ticket: int, sg: Optional[SgEntry],
+                    inv=inv) -> Completion:
+            t0 = time.perf_counter()
+            ok, result = True, None
+            try:
+                result = getattr(svc, inv.method)(*inv.args, **inv.kwargs)
+            except Exception as e:    # noqa: BLE001 — fault -> completion
+                ok, result = False, e
+            return Completion(ticket=ticket, tid=inv.tid, opcode=Oper.KERNEL,
+                              nbytes=inv.nbytes, t_submit=t0,
+                              t_done=time.perf_counter(), ok=ok,
+                              result=result)
+
+        if self.shell is None:
+            self._finish(inv, fut, execute(inv.ticket, None))
+            return
+        sg = SgEntry(length=max(inv.nbytes, 1), src_stream=0,
+                     opcode=Oper.KERNEL,
+                     meta={"method": inv.method, "service": svc.NAME})
+        self.shell.scheduler.submit(
+            slot=self.slot, stream=0, ticket=inv.ticket, sg=sg,
+            execute=execute,
+            complete=lambda comp, inv=inv, fut=fut:
+                self._finish(inv, fut, comp),
+            tenant=inv.tenant or self.tenant)
+
+    def capabilities(self) -> PortCapabilities:
+        svc = self.service
+        caps = getattr(svc, "port_capabilities", None)
+        if callable(caps):
+            return caps()
+        return PortCapabilities(
+            name=svc.NAME, kind="service", streams=0, csr_map={},
+            mem_model="none",
+            ops=tuple(getattr(svc, "PORT_METHODS", ())))
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {"generation": self.service.generation,
+                "config": self.service.config}
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Reapply the snapshotted config if the service's config moved
+        during the swap window (no-op — and no spurious generation bump —
+        when nothing changed)."""
+        cfg = snap.get("config")
+        if cfg is not None and cfg != self.service.config:
+            self.service.configure(cfg)

@@ -83,6 +83,7 @@ class _Submission:
     execute: Optional[Callable[[int, SgEntry], Completion]] = None
     complete: Optional[Callable[[Completion], None]] = None
     done_event: Optional[threading.Event] = None
+    on_done: Optional[Callable[[], None]] = None
 
 
 @dataclass
@@ -232,10 +233,14 @@ class ShellScheduler:
     def submit_io(self, nbytes: int, *, slot: int = 0, stream: int = 0,
                   tenant: Optional[str] = None, tag: str = "io",
                   wait: bool = False,
-                  timeout: Optional[float] = None) -> threading.Event:
+                  timeout: Optional[float] = None,
+                  on_done: Optional[Callable[[], None]] = None
+                  ) -> threading.Event:
         """Enqueue a raw transfer with no SG execution behind it — the path
         the serving engine uses to push its decode-step I/O through the
-        shared link under this tenant's QoS weight."""
+        shared link under this tenant's QoS weight.  ``on_done`` (used by
+        the Port layer to resolve futures) fires once the bytes clear the
+        link, on whichever thread completed them."""
         ten = (self._tenant_by_name(tenant) if tenant is not None
                else self.tenant_of(slot))
         if (self._worker is not None
@@ -262,13 +267,15 @@ class ShellScheduler:
             ten.t_last_done = now
             ev = threading.Event()
             ev.set()
+            if on_done is not None:
+                on_done()
             return ev
         sg = SgEntry(length=max(nbytes, 1), src_stream=stream,
                      meta={"tag": tag})
         sub = _Submission(slot=slot, stream=stream, ticket=-1, sg=sg,
                           tenant=ten, nbytes=max(nbytes, 1),
                           t_submit=time.perf_counter(),
-                          done_event=threading.Event())
+                          done_event=threading.Event(), on_done=on_done)
         self._enqueue(sub)
         if wait:
             sub.done_event.wait(timeout=timeout)
@@ -461,6 +468,11 @@ class ShellScheduler:
                     sub.complete(comp)
             if sub.done_event is not None:
                 sub.done_event.set()
+            if sub.on_done is not None:
+                try:
+                    sub.on_done()
+                except Exception:   # noqa: BLE001 — a bad callback must
+                    pass            # never kill the scheduler thread
             ten.completions += 1
             ten.lat_sum_s += now - sub.t_submit
         ten.batches += 1

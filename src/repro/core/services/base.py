@@ -14,14 +14,31 @@ from typing import Any, Dict, Optional
 
 
 class Service(abc.ABC):
-    """Base class.  Subclasses define NAME and a config dataclass."""
+    """Base class.  Subclasses define NAME and a config dataclass.
+
+    Port API v2: ``PORT_METHODS`` is the allowlist of operations a
+    :class:`repro.core.port.ServicePort` may dispatch
+    (``port.submit(Invocation.call("method", ...))``); anything else
+    completes with ``ok=False``.  ``port_capabilities()`` is the
+    capability descriptor registered at ``Shell.attach()``.
+    """
 
     NAME: str = "service"
+    PORT_METHODS: tuple = ("status", "configure")
+    PORT_CSR_MAP: dict = {}
+    PORT_MEM_MODEL: str = "none"
 
     def __init__(self, config: Any = None):
         self.config = config
         self.generation = 0              # bumped on every reconfigure
         self.loaded_at = time.perf_counter()
+
+    def port_capabilities(self):
+        from repro.core.port import PortCapabilities
+        return PortCapabilities(
+            name=self.NAME, kind="service", streams=0,
+            csr_map=dict(self.PORT_CSR_MAP),
+            mem_model=self.PORT_MEM_MODEL, ops=tuple(self.PORT_METHODS))
 
     # -- lifecycle -----------------------------------------------------------
     def configure(self, config: Any) -> None:

@@ -36,6 +36,9 @@ class CollectiveConfig:
 
 class CollectiveService(Service):
     NAME = "collectives"
+    PORT_METHODS = ("pick_schedule", "create_qp", "qp_permutation",
+                    "wire_bytes", "status", "configure")
+    PORT_MEM_MODEL = "device"
 
     def __init__(self, config: CollectiveConfig = CollectiveConfig()):
         super().__init__(config)

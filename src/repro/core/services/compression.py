@@ -55,6 +55,9 @@ def _topk_mask(x: jnp.ndarray, frac: float):
 
 class GradCompression(Service):
     NAME = "compression"
+    PORT_METHODS = ("init_state", "compress_leaf", "decompress_leaf",
+                    "apply", "ratio_metrics", "status", "configure")
+    PORT_MEM_MODEL = "device"
 
     def __init__(self, config: CompressionConfig = CompressionConfig()):
         super().__init__(config)

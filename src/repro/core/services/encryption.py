@@ -151,6 +151,8 @@ class AESService(Service):
     """Encryption as a reusable shell service (e.g. on the RDMA datapath)."""
 
     NAME = "encryption"
+    PORT_METHODS = ("encrypt", "status", "configure")
+    PORT_MEM_MODEL = "host"
 
     def __init__(self, config: AESConfig = AESConfig()):
         super().__init__(config)

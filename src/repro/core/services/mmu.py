@@ -125,6 +125,10 @@ class MMU(Service):
     """The paged-memory service.  Thread-safe; the 'driver' half."""
 
     NAME = "mmu"
+    PORT_METHODS = ("alloc_seq", "extend_seq", "free_seq", "translate",
+                    "block_table", "seq_lens", "utilization", "status",
+                    "configure")
+    PORT_MEM_MODEL = "paged"
 
     def __init__(self, config: MMUConfig = MMUConfig(),
                  interrupt_post: Optional[Callable[[int, int], None]] = None):

@@ -50,6 +50,12 @@ class CaptureRecord:
 
 class TrafficSniffer(Service):
     NAME = "sniffer"
+    PORT_METHODS = ("start", "stop", "to_records", "clear", "status",
+                    "configure")
+    PORT_CSR_MAP = {"enable": CSR_SNIFFER_ENABLE,
+                    "headers_only": CSR_SNIFFER_HEADERS_ONLY,
+                    "filter_id": CSR_SNIFFER_FILTER_ID}
+    PORT_MEM_MODEL = "host"
 
     def __init__(self, config: SnifferConfig = SnifferConfig()):
         super().__init__(config)

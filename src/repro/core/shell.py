@@ -28,6 +28,8 @@ import numpy as np
 from repro.core import credits as C
 from repro.core.cthread import CThread
 from repro.core.interfaces import Oper
+from repro.core.port import (Port, SERVICE_SLOT_BASE, ServicePort,
+                             VFpgaPort)
 from repro.core.scheduler import ShellScheduler, Tenant
 from repro.core.services.base import Service, ServiceRegistry
 from repro.core.services.collectives import CollectiveConfig, CollectiveService
@@ -92,6 +94,7 @@ class Shell:
         self.scheduler = ShellScheduler(self.arbiter,
                                         packet_bytes=config.packet_bytes,
                                         stream_depth=config.stream_depth)
+        self.ports: Dict[str, Port] = {}     # unified port registry (v2)
         self.built = False
 
     # ==================================================== build ("synthesis")
@@ -229,11 +232,55 @@ class Shell:
 
     def reconfigure_app(self, slot: int, artifact: AppArtifact
                         ) -> Dict[str, float]:
-        """App-only partial reconfiguration: one slot, services untouched."""
+        """App-only partial reconfiguration: one slot, services untouched.
+        Deprecated shim over :meth:`reconfigure` (now drain-aware)."""
+        return self.reconfigure(slot, artifact)
+
+    def reconfigure(self, slot: int, bitstream, *,
+                    drain_timeout: float = 30.0) -> Dict[str, float]:
+        """Drain-aware hot-swap of ONE slot (Port API v2).
+
+        ``bitstream`` is an :class:`AppArtifact` or a path to an app
+        bitstream file (safe npz+JSON format, ``repro.core.reconfig``).
+        The slot's port is quiesced first — intake held, every in-flight
+        invocation completed — then the slot state (CSR file, cThread
+        address map) is snapshotted, the new logic is loaded, state is
+        restored, and invocations submitted during the swap are replayed
+        in FIFO order against the new logic.  No completion is ever lost
+        or duplicated; other slots' traffic is never paused.
+        """
         t0 = time.perf_counter()
-        stats = self.vfpgas[slot].load(artifact, self.services, self.mesh)
+        if isinstance(bitstream, AppArtifact):
+            artifact = bitstream
+        else:
+            from repro.core.reconfig import load_app_bitstream
+            artifact = load_app_bitstream(str(bitstream))
+        port = self.attach(slot)
+        t_d0 = time.perf_counter()
+        if not port.quiesce(timeout=drain_timeout):
+            port.resume()                 # reopen intake; nothing was lost
+            raise RuntimeError(
+                f"slot {slot} failed to quiesce within {drain_timeout}s "
+                f"({port.inflight()} invocations still in flight); "
+                f"hot-swap aborted and intake resumed")
+        drain_s = time.perf_counter() - t_d0
+        snap = port.snapshot()
+        try:
+            stats = self.vfpgas[slot].load(artifact, self.services,
+                                           self.mesh)
+            port.restore(snap)
+        except BaseException:
+            # failed swap must not wedge the slot: reopen intake (held
+            # invocations replay against whatever logic is loaded)
+            port.resume()
+            raise
+        replayed = port.resume()
         stats["kernel_s"] = stats["total_s"]
-        stats["total_s"] = time.perf_counter() - t0
+        stats.update({
+            "total_s": time.perf_counter() - t0,
+            "drain_s": drain_s,
+            "replayed": float(replayed),
+        })
         return stats
 
     def cold_restart(self) -> Dict[str, float]:
@@ -248,6 +295,13 @@ class Shell:
         self.static.compile_cache.clear()
         jax.clear_caches()
         self.vfpgas.clear()
+        # every pre-restart port wraps a torn-down slot/service: close
+        # them (externally held references fail fast instead of silently
+        # dispatching against dead objects) and empty the registry —
+        # Shell.attach() hands out live ports against the rebuilt shell.
+        for p in self.ports.values():
+            p.close()
+        self.ports.clear()
         self.build(flow="shell")
         for slot, art in apps:
             self.vfpgas[slot].load(art, self.services, self.mesh)
@@ -266,6 +320,46 @@ class Shell:
         t = CThread(self.vfpgas[slot], pid)
         return t
 
+    # ================================================= ports (API v2) =======
+    def attach(self, target, *, tenant: Optional[str] = None) -> Port:
+        """Attach to a slot's or a service's unified Port.
+
+        ``target`` is a vFPGA slot index (int) or a service name (str).
+        The port's capability descriptor (streams, CSR map, memory model)
+        is registered in the shell's port table — the capability handshake
+        of the paper's unified interface.  Optionally binds the port's
+        traffic to a QoS ``tenant``.
+        """
+        if isinstance(target, int):
+            if not self.built:
+                self.build()
+            if tenant is not None:
+                self.scheduler.bind_slot(target, tenant)
+                self.vfpgas[target].tenant = tenant
+            return self.vfpgas[target].attach_port()
+        svc = self.services.get(target)
+        if svc is None:
+            raise KeyError(
+                f"no service {target!r} in this shell "
+                f"(have: {self.services.names()})")
+        port = self.ports.get(target)
+        if not isinstance(port, ServicePort) or port.service is not svc:
+            port = ServicePort(
+                svc, shell=self,
+                slot=SERVICE_SLOT_BASE + self.services.names().index(target),
+                tenant=tenant)
+            self._register_port(port)
+        elif tenant is not None:
+            port.tenant = tenant
+        return port
+
+    def port(self, slot: int) -> VFpgaPort:
+        """Shorthand: the unified port of one application slot."""
+        return self.attach(slot)
+
+    def _register_port(self, port: Port) -> None:
+        self.ports[port.name] = port
+
     # ================================================= tenants / QoS ========
     def register_tenant(self, name: str, weight: float = 1.0,
                         slots: Tuple[int, ...] = ()) -> Tenant:
@@ -280,9 +374,10 @@ class Shell:
 
     # ================================================= datapath =============
     def kick(self, slot: int) -> None:
-        """Hand the slot's queued SG entries to the scheduler (non-blocking;
-        the scheduler thread batches, credits, and arbitrates them).
-        Callers synchronize on the completion queues or :meth:`drain`."""
+        """Legacy datapath: drain a slot's raw send queues into the
+        scheduler.  ``CThread.invoke`` no longer uses the send queues (it
+        is a shim over ``port.submit``); this remains for code that still
+        pushes SG entries into ``iface.sq_read``/``sq_write`` directly."""
         vf = self.vfpgas[slot]
         for sq, cq in ((vf.iface.sq_read, vf.iface.cq_read),
                        (vf.iface.sq_write, vf.iface.cq_write)):
@@ -307,6 +402,9 @@ class Shell:
         return {
             "services": self.services.status(),
             "slots": [vf.status() for vf in self.vfpgas],
+            "ports": {name: {**p.stats(),
+                             "capabilities": p.capabilities().to_dict()}
+                      for name, p in self.ports.items()},
             "compile_cache": self.static.compile_cache.stats(),
             "link_bytes": self.static.pcie.bytes_moved,
             "fairness": self.arbiter.fairness(),

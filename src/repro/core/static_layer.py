@@ -22,7 +22,6 @@ from __future__ import annotations
 import hashlib
 import io
 import os
-import pickle
 import threading
 import time
 from dataclasses import dataclass, field
@@ -247,24 +246,36 @@ class ReconfigController:
 
     @staticmethod
     def write_bitstream(path: str, payload: Any) -> int:
-        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        """Serialize a payload dict ({kind?, arrays?, ...metadata}) into
+        the safe npz+JSON container (no pickle)."""
+        from repro.core import bitstream as B
+        if not isinstance(payload, dict):
+            payload = {"value": B.jsonable(payload)}
+        kind = payload.get("kind", "raw")
+        header = {k: B.jsonable(v) for k, v in payload.items()
+                  if k not in ("kind", "arrays")}
+        blob = B.encode(kind, header, arrays=payload.get("arrays"))
         with open(path, "wb") as f:
             f.write(blob)
         return len(blob)
 
     def load_bitstream(self, path: str, *, slot: int = 0,
                        chunk_bytes: int = 16 << 20):
-        """Returns (payload, kernel_s, total_s, nbytes)."""
+        """Returns (payload, kernel_s, total_s, nbytes).  The blob is
+        parsed by the safe container codec; malformed/unknown bitstreams
+        raise :class:`repro.core.bitstream.BitstreamError` rather than
+        deserializing arbitrary objects."""
+        from repro.core import bitstream as B
         t_total0 = time.perf_counter()
         with open(path, "rb") as f:
             blob = f.read()                       # disk -> user space
         staged = bytearray(blob)                  # user -> kernel copy
         t_k0 = time.perf_counter()
-        payload = pickle.loads(bytes(staged))
-        dev = None
-        if isinstance(payload, dict) and "arrays" in payload:
-            dev, _ = self.engine.migrate_tree(payload["arrays"])
-            payload = dict(payload, arrays=dev)
+        kind, header, arrays = B.decode(bytes(staged))
+        payload = dict(header, kind=kind)
+        if arrays is not None:
+            dev, _ = self.engine.migrate_tree(arrays)
+            payload["arrays"] = dev
         t1 = time.perf_counter()
         self.bus.post(slot, IRQ_RECONFIG_DONE, value=len(blob) & 0xFFFFFFFF)
         return payload, (t1 - t_k0), (t1 - t_total0), len(blob)

@@ -35,7 +35,11 @@ class AppArtifact:
     ``fn`` is the user logic — a host callable ``fn(iface, vfpga, **invoke
     kwargs)`` for streaming apps, or a pure JAX function when
     ``abstract_args`` is provided (then it is jit-compiled through the
-    static layer's compile cache and invoked with device arrays)."""
+    static layer's compile cache and invoked with device arrays).
+
+    ``capabilities`` is the Port API v2 capability descriptor
+    (:class:`repro.core.port.PortCapabilities`): streams, CSR map and
+    memory model, registered with the shell at ``Shell.attach()``."""
     name: str
     fn: Callable
     version: str = "0"
@@ -46,6 +50,7 @@ class AppArtifact:
     out_shardings: Any = None
     donate_argnums: Tuple[int, ...] = ()
     config_repr: Any = None
+    capabilities: Any = None               # Optional[PortCapabilities]
 
     def weight_bytes(self) -> int:
         if self.weights is None:
@@ -75,7 +80,21 @@ class VFpga:
         self.tenant: Optional[str] = None   # QoS principal (shell scheduler)
         self._addr_map: Dict[int, np.ndarray] = {}   # cThread buffers
         self._next_vaddr = 0x1000
+        self._port = None                   # lazily-created unified port
         static.interrupts.register(slot, self.iface.irq)
+
+    # -- unified port (Port API v2) ---------------------------------------------
+    def attach_port(self):
+        """The slot's unified typed interface (one per slot, lazily
+        created).  Registered with the owning shell's port table when one
+        exists, so capability descriptors surface in ``Shell.status()``."""
+        if self._port is None:
+            from repro.core.port import VFpgaPort
+            self._port = VFpgaPort(self)
+        shell = getattr(self, "shell", None)
+        if shell is not None:
+            shell._register_port(self._port)
+        return self._port
 
     # -- partial reconfiguration ------------------------------------------------
     def check_link(self, artifact: AppArtifact,

@@ -69,6 +69,8 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = disabled
+    top_p: float = 1.0                # >= 1 = disabled
     tid: int = 0                      # submitting cThread
     out_tokens: List[int] = field(default_factory=list)
     t_submit: float = 0.0
@@ -117,26 +119,31 @@ class ServingEngine:
         self.dev_lens = jnp.zeros((max_batch,), jnp.int32)
         self.dev_tokens = jnp.zeros((max_batch,), jnp.int32)
         self.dev_temps = jnp.zeros((max_batch,), jnp.float32)
+        self.dev_topk = jnp.zeros((max_batch,), jnp.int32)
+        self.dev_topp = jnp.ones((max_batch,), jnp.float32)
         self.rng = jax.random.PRNGKey(seed)
         # Optional shell binding: decode-step I/O is then submitted through
-        # the shell scheduler (weighted credits + arbiter) instead of
-        # bypassing the shared link — multi-tenant serving engines contend
-        # for bandwidth exactly like any other vFPGA traffic.
+        # the slot's unified Port (Port API v2) into the shell scheduler
+        # (weighted credits + arbiter) instead of bypassing the shared
+        # link — multi-tenant serving engines contend for bandwidth
+        # exactly like any other vFPGA traffic.
         self.shell = shell
         self.slot = slot
         self.tenant = tenant
         self.io_bytes = 0
-        self._io_events: List = []
-        if shell is not None and tenant is not None:
-            shell.scheduler.bind_slot(slot, tenant)
+        self._io_futs: List = []
+        self.port = (shell.attach(slot, tenant=tenant)
+                     if shell is not None else None)
 
     # -------------------------------------------------------------- API ----
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
-               temperature: float = 0.0, tid: int = 0) -> int:
+               temperature: float = 0.0, top_k: int = 0,
+               top_p: float = 1.0, tid: int = 0) -> int:
         rid = next(self._rid)
         self.queue.append(Request(
             rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
-            temperature=temperature, tid=tid, t_submit=time.perf_counter()))
+            temperature=temperature, top_k=top_k, top_p=top_p, tid=tid,
+            t_submit=time.perf_counter()))
         return rid
 
     @property
@@ -177,6 +184,8 @@ class ServingEngine:
         tokens = np.zeros((nb, sb), np.int32)
         lens = np.zeros((nb,), np.int32)
         temps = np.zeros((nb,), np.float32)
+        topks = np.zeros((nb,), np.int32)
+        topps = np.ones((nb,), np.float32)
         tables = np.full((nb, maxp), -1, np.int32)
         tables[:n] = self.mmu.block_table(
             [req.rid for _, req in admitted], maxp)
@@ -184,13 +193,16 @@ class ServingEngine:
             tokens[j, :len(req.prompt)] = req.prompt
             lens[j] = len(req.prompt)
             temps[j] = req.temperature
+            topks[j] = req.top_k
+            topps[j] = req.top_p
         first, self.pools, self.rng = prefill_paged(
             self.params, self.pools, jnp.asarray(tokens), jnp.asarray(lens),
             jnp.asarray(tables), self.rng, jnp.asarray(temps),
+            jnp.asarray(topks), jnp.asarray(topps),
             cfg=self.cfg, page_size=self.page)
         first = np.asarray(first)
         now = time.perf_counter()
-        slots_i, row_lens, row_toks, row_temps = [], [], [], []
+        slots_i, rows = [], []
         for j, (i, req) in enumerate(admitted):
             tok = int(first[j])
             req.out_tokens.append(tok)
@@ -208,32 +220,51 @@ class ServingEngine:
                 continue
             slots_i.append(i)
             # write position of the NEXT decode step's token
-            row_lens.append(len(req.prompt))
-            row_toks.append(tok)
-            row_temps.append(req.temperature)
+            rows.append((len(req.prompt), tok, req.temperature,
+                         req.top_k, req.top_p))
         if slots_i:
-            self._sync_slot_state(slots_i, row_lens, row_toks, row_temps)
+            self._sync_slot_state(slots_i, rows)
 
-    def _sync_slot_state(self, slots_i, lens, toks, temps) -> None:
+    def _sync_slot_state(self, slots_i, rows) -> None:
         """Push slot-transition deltas into the device-resident state
-        (admissions and frees only — never on the per-step path)."""
+        (admissions and frees only — never on the per-step path).
+        ``rows`` is a list of (len, token, temperature, top_k, top_p)."""
         idx = jnp.asarray(slots_i, jnp.int32)
+        lens, toks, temps, topks, topps = zip(*rows)
         self.dev_lens = self.dev_lens.at[idx].set(
             jnp.asarray(lens, jnp.int32))
         self.dev_tokens = self.dev_tokens.at[idx].set(
             jnp.asarray(toks, jnp.int32))
         self.dev_temps = self.dev_temps.at[idx].set(
             jnp.asarray(temps, jnp.float32))
+        self.dev_topk = self.dev_topk.at[idx].set(
+            jnp.asarray(topks, jnp.int32))
+        self.dev_topp = self.dev_topp.at[idx].set(
+            jnp.asarray(topps, jnp.float32))
 
-    def _sample(self, logits: np.ndarray, temperature: float) -> np.ndarray:
+    def _sample(self, logits: np.ndarray, temperature: float,
+                top_k: int = 0, top_p: float = 1.0) -> np.ndarray:
         """Host-side sampling oracle for the fused on-device sampler:
-        vectorized Gumbel-max (greedy at temperature <= 0)."""
+        vectorized Gumbel-max with the same top-k -> top-p filter rule
+        (greedy at temperature <= 0)."""
         logits = logits[..., :self.cfg.vocab_size]
         if temperature <= 0:
             return np.argmax(logits, axis=-1)
-        u = np.clip(self._rng.random_sample(logits.shape), 1e-12, 1 - 1e-12)
+        z = logits.astype(np.float64) / temperature
+        v = z.shape[-1]
+        if 0 < top_k < v:
+            kth = np.sort(z, axis=-1)[..., -top_k][..., None]
+            z = np.where(z < kth, -np.inf, z)
+        if top_p < 1.0:
+            srt = np.sort(z, axis=-1)[..., ::-1]
+            ez = np.exp(srt - srt[..., :1])
+            cum = np.cumsum(ez / ez.sum(axis=-1, keepdims=True), axis=-1)
+            idx = np.minimum((cum < top_p).sum(axis=-1), v - 1)
+            cutoff = np.take_along_axis(srt, idx[..., None], axis=-1)
+            z = np.where(z < cutoff, -np.inf, z)
+        u = np.clip(self._rng.random_sample(z.shape), 1e-12, 1 - 1e-12)
         g = -np.log(-np.log(u))
-        return np.argmax(logits / temperature + g, axis=-1)
+        return np.argmax(np.where(np.isfinite(z), z + g, -np.inf), axis=-1)
 
     # ------------------------------------------------------------ decode ----
     def step(self) -> int:
@@ -252,13 +283,16 @@ class ServingEngine:
         if upd:
             self._sync_slot_state(
                 upd,
-                [len(self.slots[i].prompt)
-                 + len(self.slots[i].out_tokens) - 1 for i in upd],
-                [self.slots[i].out_tokens[-1] for i in upd],
-                [self.slots[i].temperature for i in upd])
+                [(len(self.slots[i].prompt)
+                  + len(self.slots[i].out_tokens) - 1,
+                  self.slots[i].out_tokens[-1],
+                  self.slots[i].temperature,
+                  self.slots[i].top_k,
+                  self.slots[i].top_p) for i in upd])
         next_toks, self.pools, self.dev_lens, self.rng = decode_step_paged(
             self.params, self.pools, tables, self.dev_lens,
-            self.dev_tokens, self.rng, self.dev_temps, cfg=self.cfg,
+            self.dev_tokens, self.rng, self.dev_temps, self.dev_topk,
+            self.dev_topp, cfg=self.cfg,
             page_size=self.page, use_pallas=self.use_pallas,
             pages_per_block=self.pages_per_block)
         self.dev_tokens = next_toks
@@ -269,7 +303,7 @@ class ServingEngine:
         self._submit_step_io(n_live=n_live)
 
         emitted = 0
-        freed, f_lens, f_toks, f_temps = [], [], [], []
+        freed = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -286,11 +320,8 @@ class ServingEngine:
                 self.completed.append(req)
                 self.slots[i] = None
                 freed.append(i)
-                f_lens.append(0)
-                f_toks.append(0)
-                f_temps.append(0.0)
         if freed:
-            self._sync_slot_state(freed, f_lens, f_toks, f_temps)
+            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0)] * len(freed))
         self.tokens_out += emitted
         return emitted
 
@@ -298,38 +329,38 @@ class ServingEngine:
     def _submit_step_io(self, n_live: int) -> None:
         """Bill this decode step's host I/O — one int32 token per live
         row is all that crosses the link — to our tenant through the
-        shell scheduler.  Submission is async: the event is collected and
-        settled at the next step boundary.  Only the scheduler's
-        submitter back-pressure (tenant pending bound) can block here,
-        which is the intended self-containment of an over-subscribed
-        tenant."""
-        if self.shell is None or n_live == 0:
+        slot's unified Port (``port.submit`` -> shell scheduler).
+        Submission is async: the future is collected and settled at the
+        next step boundary.  Only the scheduler's submitter back-pressure
+        (tenant pending bound) can block here, which is the intended
+        self-containment of an over-subscribed tenant."""
+        if self.port is None or n_live == 0:
             return
+        from repro.core.port import Invocation
         nbytes = n_live * 4
         self.io_bytes += nbytes
-        ev = self.shell.scheduler.submit_io(
-            nbytes, slot=self.slot, tenant=self.tenant, tag="decode_io",
-            wait=False)
-        self._io_events.append(ev)
+        fut = self.port.submit(Invocation.io(
+            nbytes, tag="decode_io", tenant=self.tenant))
+        self._io_futs.append(fut)
 
     def _settle_io(self) -> None:
-        """Drop completed I/O events (non-blocking settle)."""
-        if self._io_events:
-            self._io_events = [e for e in self._io_events if not e.is_set()]
+        """Drop completed I/O futures (non-blocking settle)."""
+        if self._io_futs:
+            self._io_futs = [f for f in self._io_futs if not f.done()]
 
     def flush_io(self, timeout: float = 30.0) -> bool:
         """Wait (bounded by one shared deadline) for outstanding billed
-        I/O to clear the link.  Events that do not clear stay queued so
+        I/O to clear the link.  Futures that do not clear stay queued so
         accounting is never silently dropped; returns True when fully
         drained."""
         deadline = time.perf_counter() + timeout
         remaining = []
-        for ev in self._io_events:
+        for fut in self._io_futs:
             left = deadline - time.perf_counter()
-            if left <= 0 or not ev.wait(timeout=left):
-                remaining.append(ev)
-        self._io_events = remaining
-        return not remaining
+            if left <= 0 or fut.completion(timeout=left) is None:
+                remaining.append(fut)
+        self._io_futs = [f for f in remaining if not f.done()]
+        return not self._io_futs
 
     def run(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()

@@ -104,12 +104,14 @@ def write_prefill(pools, layer_kv, tables, lens, page_size: int):
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
                    donate_argnames=("pools", "rng"))
 def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
+                  top_k=None, top_p=None,
                   *, cfg: ModelConfig, page_size: int):
     """Batched prefill: one padded forward for every admitted request.
 
     tokens (N, S) int32 right-padded prompts; lens (N,) prompt lengths
     (0 = padding row); tables (N, maxp) block tables for the freshly
-    allocated sequences; temperatures (N,).  Returns
+    allocated sequences; temperatures (N,); optional per-request top_k
+    (N,) int32 / top_p (N,) float32 sampling filters.  Returns
     (first_tokens (N,) int32, new_pools, new_rng).  ``pools`` and ``rng``
     are donated; sampling happens on device (padding rows yield garbage
     tokens the caller ignores).
@@ -121,7 +123,7 @@ def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
     last = hidden[jnp.arange(n), jnp.maximum(lens - 1, 0)]      # (N, D)
     logits = lm_logits(params, cfg, last)[..., :cfg.vocab_size]
     rng, sub = jax.random.split(rng)
-    first = sample_per_row(sub, logits, temperatures)
+    first = sample_per_row(sub, logits, temperatures, top_k, top_p)
     return first, pools, rng
 
 
@@ -130,7 +132,8 @@ def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
                                              "pages_per_block"),
                    donate_argnames=("pools", "lens", "last_tokens", "rng"))
 def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
-                      temperatures, *, cfg: ModelConfig, page_size: int,
+                      temperatures, top_k=None, top_p=None,
+                      *, cfg: ModelConfig, page_size: int,
                       use_pallas: bool = False,
                       pages_per_block: Optional[int] = None):
     """One fused decode step for the whole running batch.
@@ -138,7 +141,9 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
     last_tokens (B,) int32 — last sampled token per row;
     lens (B,) int32       — tokens already in cache (new token position);
     tables (B, maxp)      — MMU block tables (row of -1s = inactive slot);
-    temperatures (B,)     — per-row sampling temperature (<= 0 = greedy).
+    temperatures (B,)     — per-row sampling temperature (<= 0 = greedy);
+    top_k (B,) int32      — optional per-row top-k filter (0 = disabled);
+    top_p (B,) float32    — optional per-row nucleus filter (>=1 = off).
 
     Returns (next_tokens (B,) int32, new_pools, new_lens, new_rng).
     ``pools``, ``lens``, ``last_tokens`` and ``rng`` are donated: the
@@ -195,7 +200,7 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
     # sample every row (the host ignores empty slots): a live row whose
     # write-position page was evicted still emits a real (degraded)
     # sample, matching the host-side oracle's behaviour under pressure.
-    next_tokens = sample_per_row(sub, logits, temperatures)
+    next_tokens = sample_per_row(sub, logits, temperatures, top_k, top_p)
     # lens mirrors the host's per-step append unconditionally, so an
     # evicted row's write position keeps tracking host truth and the row
     # self-reactivates once its next page is mapped (slot transitions

@@ -45,20 +45,59 @@ def _apply_min_p(logits, mp: float):
     return jnp.where(probs < mp * top, -jnp.inf, logits)
 
 
-def sample_per_row(rng, logits, temperatures):
+def _filter_per_row(z, top_k, top_p):
+    """Per-row top-k then top-p nucleus filtering on temperature-scaled
+    logits z (B, V).  top_k (B,) int32, 0 = disabled; top_p (B,) float,
+    >= 1 = disabled.  At least one token always survives per row."""
+    v = z.shape[-1]
+    srt = jnp.sort(z, axis=-1)[..., ::-1]            # descending
+    # top-k: keep z >= k-th largest (k clamped to [1, V])
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    kth = jnp.where((top_k > 0)[:, None], kth, -jnp.inf)
+    z = jnp.where(z < kth, -jnp.inf, z)
+    # top-p: smallest prefix of the (top-k-filtered) sorted distribution
+    # with cumulative probability >= p (always >= 1 token).  The top-k
+    # mask only removes the tail of the sorted array, so masking srt
+    # directly keeps it sorted — no second O(V log V) sort.
+    srt2 = jnp.where(srt < kth, -jnp.inf, srt)
+    probs = jax.nn.softmax(srt2, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    idx = jnp.minimum(jnp.sum(cum < top_p[:, None], axis=-1), v - 1)
+    cutoff = jnp.take_along_axis(srt2, idx[:, None], axis=-1)
+    cutoff = jnp.where((top_p < 1.0)[:, None], cutoff, -jnp.inf)
+    return jnp.where(z < cutoff, -jnp.inf, z)
+
+
+def sample_per_row(rng, logits, temperatures, top_k=None, top_p=None):
     """Fused per-row sampling for the device-resident decode hot path.
 
     logits (B, V) float; temperatures (B,) float — rows with
     temperature <= 0 take the argmax, the rest draw via Gumbel-max
     (argmax of logits/T + Gumbel noise == categorical(softmax(logits/T))).
+    Optional per-request filtering: top_k (B,) int32 (0 = disabled) and
+    top_p (B,) float (>= 1 = disabled).  The filter pass (a per-row sort)
+    runs under ``lax.cond`` so batches with every filter disabled — the
+    greedy/temperature steady state — never pay for it.
     Returns (B,) int32.  Not jitted on its own: it is traced inside
     ``decode_step_paged``/``prefill_paged`` so logits never leave the
     device and the PRNG key stays device-resident.
     """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     t = jnp.maximum(temperatures, 1e-6)[:, None].astype(jnp.float32)
+    z = logits.astype(jnp.float32) / t
+    if top_k is not None or top_p is not None:
+        b = logits.shape[0]
+        tk = (jnp.asarray(top_k, jnp.int32) if top_k is not None
+              else jnp.zeros((b,), jnp.int32))
+        tp = (jnp.asarray(top_p, jnp.float32) if top_p is not None
+              else jnp.ones((b,), jnp.float32))
+        enabled = jnp.any(tk > 0) | jnp.any(tp < 1.0)
+        z = jax.lax.cond(enabled,
+                         lambda zz: _filter_per_row(zz, tk, tp),
+                         lambda zz: zz, z)
     g = jax.random.gumbel(rng, logits.shape, jnp.float32)
-    noisy = jnp.argmax(logits.astype(jnp.float32) / t + g,
+    noisy = jnp.argmax(jnp.where(jnp.isfinite(z), z + g, -jnp.inf),
                        axis=-1).astype(jnp.int32)
     return jnp.where(temperatures > 0, noisy, greedy)
 

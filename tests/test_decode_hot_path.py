@@ -226,3 +226,41 @@ def test_engine_temperature_uses_device_sampler(served):
     fake[:, 5] = 100.0
     np.testing.assert_array_equal(eng._sample(fake, 0.0), [5, 5, 5, 5])
     assert eng._sample(fake, 1.0).shape == (4,)
+
+
+def test_engine_per_request_topk1_matches_greedy_stream(served):
+    """Per-request sampler filters: a top_k=1 request at high temperature
+    is deterministic and must emit exactly the greedy token stream, while
+    sharing the batch with a plain greedy request (no cross-row leak)."""
+    cfg, params = served
+    prompts = [list(range(3, 12)), list(range(4, 13))]
+
+    def run(**kw):
+        mmu = MMU(MMUConfig(page_size=16, n_pages=128))
+        eng = ServingEngine(cfg, params, mmu, max_batch=2, max_len=96)
+        eng.submit(prompts[0], max_new_tokens=6, **kw)
+        eng.submit(prompts[1], max_new_tokens=6)
+        eng.run()
+        return {tuple(r.prompt): r.out_tokens for r in eng.completed}
+
+    greedy = run()
+    hot_k1 = run(temperature=5.0, top_k=1)
+    assert hot_k1[tuple(prompts[0])] == greedy[tuple(prompts[0])]
+    assert hot_k1[tuple(prompts[1])] == greedy[tuple(prompts[1])]
+
+
+def test_engine_per_request_filters_keep_single_trace(served):
+    """Adding per-request top-k/top-p must not break the retrace guard:
+    decode still compiles once per engine shape across filter churn."""
+    cfg, params = served
+    mmu = MMU(MMUConfig(page_size=16, n_pages=128))
+    # max_len 160 -> a table shape unique to this test
+    eng = ServingEngine(cfg, params, mmu, max_batch=2, max_len=160)
+    eng.submit(list(range(3, 10)), max_new_tokens=3)
+    before = TRACE_COUNTS.get("decode_step_paged", 0)
+    eng.step()
+    eng.submit(list(range(3, 14)), max_new_tokens=3,
+               temperature=2.0, top_k=4, top_p=0.8)   # filters switch ON
+    eng.run()
+    assert TRACE_COUNTS["decode_step_paged"] - before == 1
+    assert len(eng.completed) == 2

@@ -87,3 +87,70 @@ def test_disaggregated_handoff_multidev():
                             # the child never probes for TPU backends
                             "JAX_PLATFORMS": "cpu"})
     assert "DISAGG_OK" in r.stdout, f"\n{r.stdout}\n{r.stderr[-2000:]}"
+
+
+# ---------------------- per-row top-k/top-p in the fused sampler ----------
+def test_sample_per_row_topk1_is_exactly_greedy_even_hot():
+    from repro.serve.sampler import sample_per_row
+    logits = jax.random.normal(jax.random.PRNGKey(1), (6, 50)) * 3.0
+    temps = jnp.full((6,), 5.0)
+    tk = jnp.asarray([1, 0, 1, 3, 1, 0], jnp.int32)
+    tp = jnp.ones((6,), jnp.float32)
+    am = np.argmax(np.asarray(logits), -1)
+    top3 = np.argsort(np.asarray(logits), -1)[:, -3:]
+    for s in range(8):
+        toks = np.asarray(sample_per_row(jax.random.PRNGKey(s), logits,
+                                         temps, tk, tp))
+        np.testing.assert_array_equal(toks[[0, 2, 4]], am[[0, 2, 4]])
+        assert toks[3] in top3[3]               # row-local k=3 support
+
+
+def test_sample_per_row_per_row_top_p():
+    from repro.serve.sampler import sample_per_row
+    # row 0 peaked + p=0.5 -> must collapse to the top token;
+    # row 1 flat + p=1.0 -> unrestricted
+    lg = jnp.asarray([[10.0, 0.0, 0.0, 0.0], [0.1, 0.2, 0.15, 0.12]])
+    tp = jnp.asarray([0.5, 1.0], jnp.float32)
+    tk = jnp.zeros((2,), jnp.int32)
+    seen1 = set()
+    for s in range(24):
+        t = np.asarray(sample_per_row(jax.random.PRNGKey(s), lg,
+                                      jnp.full((2,), 1.0), tk, tp))
+        assert t[0] == 0
+        seen1.add(int(t[1]))
+    assert len(seen1) > 1                        # row 1 still samples
+
+
+def test_sample_per_row_disabled_filters_match_legacy_path():
+    from repro.serve.sampler import sample_per_row
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 40))
+    temps = jnp.full((4,), 1.3)
+    a = np.asarray(sample_per_row(jax.random.PRNGKey(7), logits, temps))
+    b = np.asarray(sample_per_row(jax.random.PRNGKey(7), logits, temps,
+                                  jnp.zeros((4,), jnp.int32),
+                                  jnp.ones((4,), jnp.float32)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_host_oracle_matches_fused_support_restriction():
+    """The engine's host Gumbel oracle stays in parity with the fused
+    sampler: same top-k/top-p support rule on the same logits."""
+    from repro.configs import get_config
+    from repro.core.services.mmu import MMU, MMUConfig
+    from repro.serve.engine import ServingEngine
+    cfg = get_config("smollm-135m").reduced()
+    eng = ServingEngine.__new__(ServingEngine)   # oracle only, no model
+    eng.cfg = cfg
+    eng._rng = np.random.RandomState(0)
+    v = cfg.vocab_size
+    logits = np.random.RandomState(1).randn(200, v) * 3.0
+    toks = eng._sample(logits, 1.0, top_k=3)
+    top3 = np.argsort(logits, -1)[:, -3:]
+    assert all(t in row for t, row in zip(toks, top3))
+    # top_k=1 == greedy exactly
+    np.testing.assert_array_equal(eng._sample(logits, 5.0, top_k=1),
+                                  np.argmax(logits, -1))
+    # peaked distribution under p=0.5 keeps only the head
+    peak = np.zeros((50, v), np.float32)
+    peak[:, 7] = 12.0
+    assert (eng._sample(peak, 1.0, top_p=0.5) == 7).all()
