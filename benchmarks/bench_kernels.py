@@ -47,9 +47,14 @@ def _cell(b: int, seq_pages: int, kern: str,
         "batch": b,
         "seq_pages": seq_pages,
         "kernel": kern,
-        "tokens_per_s": b / max(t["mean_s"], 1e-12),
+        # best-of-trials: the gated trend metric must be robust to the
+        # dispatch/GC spikes that give the interpret-mode pallas cells
+        # std ~ mean (mean-based tokens/s swung >2x run-to-run, which no
+        # sane CI floor survives; min-of-5 is stable)
+        "tokens_per_s": b / max(t["min_s"], 1e-12),
         "mean_s": t["mean_s"],
         "std_s": t["std_s"],
+        "min_s": t["min_s"],
     }
 
 

@@ -1,0 +1,187 @@
+"""Two-tenant multi-slot A/B: executor lanes vs serialized execution.
+
+One tenant ("batch") occupies slot 0 with long-running invocations — a
+stand-in for an lm_serving serve loop or a streaming NN predict, i.e.
+tens of milliseconds of checkpointed work per invocation.  A second
+tenant ("latency") drives short closed-loop invocations on slot 1 and
+measures submit→completion latency.
+
+  * ``lanes=off`` — the pre-PR-4 baseline: one scheduler worker executes
+    every slot's work serially, so each latency-tenant completion waits
+    out whatever long batch is in flight (p99 ≈ the long-invocation
+    duration).
+  * ``lanes=on``  — granted work executes on per-slot lanes; slot 1's
+    completions never queue behind slot 0's serve loop.
+
+A third cell exercises same-slot preemption: high-priority invocations
+against the busy slot complete inside the long batch's checkpoint holds
+instead of waiting for the whole lane FIFO.
+
+The workload is identical in both modes, so per-tenant billed bytes must
+match exactly — lanes move WHERE execution happens, never what is billed.
+Writes ``BENCH_multislot.json`` (via benchmarks.run) with the p99
+speedup as the trend metric.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common  # noqa: F401  (JAX_PLATFORMS pin)
+from repro.core import AppArtifact, Invocation, Oper, SgEntry, Shell, \
+    ShellConfig
+
+N_LONG = 40              # long invocations by the batch tenant
+LONG_ITEMS = 10          # checkpointed units per long invocation
+ITEM_S = 0.002           # seconds per unit  (one "decode step")
+N_LAT = 40               # closed-loop latency-tenant requests
+N_HI = 30                # high-priority same-slot requests
+
+
+def _long_or_fast(vf_checkpoint=True):
+    """Slot logic: payload byte 0 == 0 -> long checkpointed loop,
+    anything else -> fast return (the tag scheme lets one slot serve
+    both the background batch and the high-priority probes)."""
+    def fn(iface, vf, x):
+        data = np.asarray(x)
+        if data.size and data.flat[0] == 0:
+            for _ in range(LONG_ITEMS):
+                time.sleep(ITEM_S)
+                if vf_checkpoint:
+                    vf.checkpoint()
+        return x
+    return fn
+
+
+def _sg(nbytes: int, fill: int, stream: int = 0) -> SgEntry:
+    return SgEntry(src=np.full(nbytes, fill, np.uint8), length=nbytes,
+                   src_stream=stream, opcode=Oper.LOCAL_TRANSFER)
+
+
+def _percentiles(lat_s: List[float]) -> Dict[str, float]:
+    a = np.asarray(lat_s) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean())}
+
+
+def _run_two_tenant(lanes: bool) -> Dict[str, float]:
+    shell = Shell(ShellConfig.make(services={}, n_vfpgas=2,
+                                   executor_lanes=lanes))
+    shell.build()
+    shell.register_tenant("batch", 1.0, slots=(0,))
+    shell.register_tenant("latency", 1.0, slots=(1,))
+    shell.load_app(0, AppArtifact(name="serve_loop", fn=_long_or_fast()))
+    shell.load_app(1, AppArtifact(name="echo", fn=lambda i, v, x: x))
+    p0, p1 = shell.attach(0), shell.attach(1)
+
+    started = threading.Event()
+
+    def batch_driver():
+        futs = []
+        for k in range(N_LONG):
+            futs.append(p0.submit(Invocation.from_sg(_sg(4096, 0))))
+            if k == 0:
+                started.set()
+        for f in futs:
+            f.result(timeout=120.0)
+
+    th = threading.Thread(target=batch_driver)
+    th.start()
+    started.wait(timeout=10.0)
+    time.sleep(0.01)                       # slot 0 busy before we probe
+
+    lats = []
+    for _ in range(N_LAT):
+        t0 = time.perf_counter()
+        comp = p1.submit(Invocation.from_sg(_sg(256, 7))).result(
+            timeout=120.0)
+        assert comp.ok
+        lats.append(time.perf_counter() - t0)
+    th.join()
+    shell.drain()
+    stats = shell.scheduler.stats()["tenants"]
+    out = {**_percentiles(lats),
+           "billed_bytes_batch": stats["batch"]["bytes"],
+           "billed_bytes_latency": stats["latency"]["bytes"],
+           "completions_batch": stats["batch"]["completions"],
+           "completions_latency": stats["latency"]["completions"]}
+    shell.close()
+    return out
+
+
+def _run_same_slot(priority: int) -> Dict[str, float]:
+    """Same-slot contention, lanes on: probes at ``priority`` against a
+    slot running long checkpointed batches.  Probes ride their own
+    stream (per-stream FIFO is inviolable — priority reorders only
+    ACROSS streams): priority>0 preempts the in-flight long batch at
+    its checkpoints; priority 0 waits out the lane FIFO."""
+    shell = Shell(ShellConfig.make(services={}, n_vfpgas=1,
+                                   executor_lanes=True))
+    shell.build()
+    shell.register_tenant("batch", 1.0, slots=(0,))
+    shell.load_app(0, AppArtifact(name="serve_loop", fn=_long_or_fast()))
+    port = shell.attach(0)
+    started = threading.Event()
+
+    def batch_driver():
+        futs = []
+        for k in range(N_LONG // 4):
+            futs.append(port.submit(Invocation.from_sg(_sg(4096, 0))))
+            if k == 0:
+                started.set()
+        for f in futs:
+            f.result(timeout=120.0)
+
+    th = threading.Thread(target=batch_driver)
+    th.start()
+    started.wait(timeout=10.0)
+    time.sleep(0.01)
+
+    lats = []
+    for _ in range(N_HI):
+        t0 = time.perf_counter()
+        comp = port.submit(Invocation.from_sg(_sg(256, 7, stream=1),
+                                              priority=priority)).result(
+            timeout=120.0)
+        assert comp.ok
+        lats.append(time.perf_counter() - t0)
+    th.join()
+    shell.drain()
+    lane = shell.scheduler.stats()["lanes"].get("0", {})
+    out = {**_percentiles(lats),
+           "preempt_runs": lane.get("preempt_runs", 0),
+           "preemptions": shell.vfpgas[0].preemptions}
+    shell.close()
+    return out
+
+
+def run() -> List[Dict]:
+    off = _run_two_tenant(lanes=False)
+    on = _run_two_tenant(lanes=True)
+    billing_match = float(
+        off["billed_bytes_batch"] == on["billed_bytes_batch"]
+        and off["billed_bytes_latency"] == on["billed_bytes_latency"])
+    speedup = off["p99_ms"] / max(on["p99_ms"], 1e-9)
+    fifo = _run_same_slot(priority=0)
+    hi = _run_same_slot(priority=5)
+    rows = [
+        {"config": "lat_tenant/lanes=off", **off},
+        {"config": "lat_tenant/lanes=on", **on, "billing_match":
+            billing_match},
+        {"config": "p99_speedup", "p99_speedup_x": speedup,
+         "p99_off_ms": off["p99_ms"], "p99_on_ms": on["p99_ms"],
+         "billing_match": billing_match},
+        {"config": "preempt/sameslot_fifo", **fifo},
+        {"config": "preempt/sameslot_hiprio", **hi,
+         "hiprio_speedup_x": fifo["p99_ms"] / max(hi["p99_ms"], 1e-9)},
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), "multislot: executor lanes A/B")

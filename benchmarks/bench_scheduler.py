@@ -30,8 +30,14 @@ WEIGHT_SETS: Dict[str, Tuple[float, ...]] = {
 def _run_cell(weights: Tuple[float, ...], packet_bytes: int,
               buf_kb: int, n_bufs: int) -> Dict[str, float]:
     n = len(weights)
+    # executor lanes OFF: this suite measures DWRR *arbitration* shares
+    # on the deterministic virtual clock.  Lanes release credits from
+    # real threads, coupling the virtual-time share measurement to host
+    # scheduling jitter; lane execution latency has its own suite
+    # (bench_multislot), so here we keep the instrument deterministic.
     shell = Shell(ShellConfig.make(services={}, n_vfpgas=n,
-                                   packet_bytes=packet_bytes))
+                                   packet_bytes=packet_bytes,
+                                   executor_lanes=False))
     shell.build()
     names = [f"t{i}w{weights[i]:g}" for i in range(n)]
     for i, name in enumerate(names):

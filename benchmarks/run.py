@@ -42,6 +42,8 @@ SUITES = [
      "LLM serving: decode tokens/s vs batch x page x kernel"),
     ("llm_serving_scaling", "bench_serving:run_scaling",
      "LLM serving: decode throughput vs concurrency (Fig 10b shape)"),
+    ("multislot_lanes", "bench_multislot",
+     "Multi-slot executor lanes: two-tenant p50/p99 A/B + preemption"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
@@ -53,6 +55,7 @@ JSON_ARTIFACTS = {
     "llm_serving": ("BENCH_serving.json", "bench_serving"),
     "scheduler_qos": ("BENCH_scheduler.json", "bench_scheduler"),
     "kernel_microbench": ("BENCH_kernels.json", "bench_kernels"),
+    "multislot_lanes": ("BENCH_multislot.json", "bench_multislot"),
 }
 
 

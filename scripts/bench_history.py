@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""Bench-history store: artifact rows keyed by (commit, suite, config).
+
+    python scripts/bench_history.py append BENCH_serving.json [...]
+    python scripts/bench_history.py trend [--suite bench_serving]
+                                          [--config b8_p16_pallas0]
+                                          [--last 10]
+
+``append`` reads machine-readable bench artifacts (the
+``benchmarks.common.emit_json`` schema) and appends one JSONL row per
+artifact row to ``BENCH_HISTORY.jsonl``.  Re-appending for the same
+(commit, suite, config) replaces the earlier row, so re-running CI on a
+dirty tree never duplicates history.  ``trend`` prints a per-config
+series over the last N distinct commits — the "more than one PR back"
+view that ``git show HEAD:<file>`` cannot give.
+
+``scripts/diff_bench.py`` falls back to this file when an artifact has
+no committed baseline at HEAD (e.g. a brand-new suite whose artifact was
+benched but not yet committed, or a rebase that dropped it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, Iterable, List, Optional
+
+HISTORY_PATH = "BENCH_HISTORY.jsonl"
+
+# Trend metrics living under a row's "extra" dict, in fallback order
+# (sense +1 = higher is better, -1 = lower is better).  The scheduler
+# rows carry no timing — QoS error is their signal; the multislot rows
+# trend on the lanes-on p99 speedup.  scripts/diff_bench.py consumes
+# THIS list, so both tools always agree on a row's primary metric.
+EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1),
+                 ("p99_speedup_x", +1))
+
+
+def metric_of(row: Dict) -> Optional[tuple]:
+    """A row's primary trend metric as (name, value, sense):
+    tokens_per_s, else mean_s, else the first EXTRA_METRICS hit."""
+    tps = float(row.get("tokens_per_s", 0.0))
+    if tps > 0:
+        return "tokens_per_s", tps, +1
+    mean = float(row.get("mean_s", 0.0))
+    if mean > 0:
+        return "mean_s", mean, -1
+    extra = row.get("extra", {})
+    for key, sense in EXTRA_METRICS:
+        if key in extra:
+            return key, float(extra[key]), sense
+    return None
+
+
+def git_head(default: str = "unknown") -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, check=True)
+        return out.stdout.strip() or default
+    except (subprocess.CalledProcessError, OSError):
+        return default
+
+
+def load_history(path: str = HISTORY_PATH) -> List[Dict]:
+    """All history rows, oldest first.  Unparseable lines are skipped —
+    the store must survive a truncated write from a killed CI job."""
+    rows: List[Dict] = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue
+    except OSError:
+        pass
+    return rows
+
+
+def _write_history(rows: Iterable[Dict], path: str) -> None:
+    """Atomic rewrite (temp file + rename): a CI job killed mid-write
+    must lose at most the in-flight update, never the whole store."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r, default=str) + "\n")
+    os.replace(tmp, path)
+
+
+def append(artifacts: List[str], *, commit: Optional[str] = None,
+           path: str = HISTORY_PATH) -> int:
+    """Append every row of every artifact under ``commit`` (default:
+    current HEAD), replacing rows with the same (commit, suite, config)."""
+    commit = commit or git_head()
+    existing = load_history(path)
+    # a commit keeps its FIRST-seen timestamp forever: re-benching an
+    # old checkout refreshes its rows without promoting it to "newest"
+    # in latest_rows()
+    first_ts = min((float(r.get("ts", 0.0)) for r in existing
+                    if r.get("commit") == commit and r.get("ts")),
+                   default=time.time())
+    fresh: List[Dict] = []
+    for art in artifacts:
+        try:
+            with open(art) as f:
+                rows = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[history] skip {art}: {e}", file=sys.stderr)
+            continue
+        for r in rows:
+            if "config" not in r:
+                continue
+            fresh.append({
+                "commit": commit,
+                "suite": r.get("bench", art),
+                "config": r["config"],
+                "tokens_per_s": float(r.get("tokens_per_s", 0.0)),
+                "mean_s": float(r.get("mean_s", 0.0)),
+                "extra": r.get("extra", {}),
+                "ts": first_ts,
+            })
+    if not fresh:
+        print("[history] nothing to append")
+        return 0
+    replaced = {(r["commit"], r["suite"], r["config"]) for r in fresh}
+    kept = [r for r in existing
+            if (r.get("commit"), r.get("suite"), r.get("config"))
+            not in replaced]
+    _write_history(kept + fresh, path)
+    print(f"[history] {path}: +{len(fresh)} rows for {commit[:12]} "
+          f"({len(kept)} kept)")
+    return 0
+
+
+def latest_rows(suite: str, *, exclude_commit: Optional[str] = None,
+                path: str = HISTORY_PATH) -> Optional[List[Dict]]:
+    """The most recent commit's rows for a suite (``diff_bench``'s
+    fallback baseline).  ``exclude_commit`` skips the in-flight commit so
+    a re-run never diffs an artifact against itself."""
+    rows = [r for r in load_history(path)
+            if r.get("suite") == suite and r.get("commit") != exclude_commit]
+    if not rows:
+        return None
+    # newest = max append timestamp, NOT file position: re-benching an
+    # old commit rewrites its rows at the file end but must not make it
+    # the baseline (rows without ts sort oldest, by file order)
+    last = max(rows, key=lambda r: float(r.get("ts", 0.0)))["commit"]
+    return [r for r in rows if r["commit"] == last]
+
+
+def trend(*, suite: Optional[str] = None, config: Optional[str] = None,
+          last: int = 10, path: str = HISTORY_PATH) -> int:
+    """Per-(suite, config) metric series over the last N commits."""
+    rows = load_history(path)
+    if suite:
+        rows = [r for r in rows if r.get("suite") == suite]
+    if config:
+        rows = [r for r in rows if r.get("config") == config]
+    if not rows:
+        print("[history] no matching rows")
+        return 0
+    # commit order = first-seen timestamp (stable across re-appends),
+    # falling back to file position for pre-ts rows
+    order: Dict[str, tuple] = {}
+    for i, r in enumerate(rows):
+        order.setdefault(r["commit"], (float(r.get("ts", 0.0)), i))
+    commits = sorted(order, key=order.get)[-last:]
+    series: Dict[tuple, Dict[str, Dict]] = {}
+    for r in rows:
+        if r["commit"] not in commits:
+            continue
+        series.setdefault((r["suite"], r["config"]), {})[r["commit"]] = r
+    for (s, c), by_commit in sorted(series.items()):
+        print(f"\n## {s} :: {c}")
+        for commit in commits:
+            r = by_commit.get(commit)
+            if r is None:
+                continue
+            m = metric_of(r)
+            val = f"{m[1]:.4g} {m[0]}" if m else "(no metric)"
+            print(f"  {commit[:12]}  {val}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_a = sub.add_parser("append", help="append artifact rows to history")
+    ap_a.add_argument("artifacts", nargs="+")
+    ap_a.add_argument("--commit", default=None,
+                      help="override the commit key (default: HEAD)")
+    ap_a.add_argument("--history", default=HISTORY_PATH)
+    ap_t = sub.add_parser("trend", help="print per-config history")
+    ap_t.add_argument("--suite", default=None)
+    ap_t.add_argument("--config", default=None)
+    ap_t.add_argument("--last", type=int, default=10,
+                      help="how many commits back to show")
+    ap_t.add_argument("--history", default=HISTORY_PATH)
+    args = ap.parse_args(argv)
+    if args.cmd == "append":
+        return append(args.artifacts, commit=args.commit,
+                      path=args.history)
+    return trend(suite=args.suite, config=args.config, last=args.last,
+                 path=args.history)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,23 +1,36 @@
 #!/usr/bin/env python
-"""Diff machine-readable bench artifacts against the previous PR's.
+"""Diff machine-readable bench artifacts against their baselines.
 
     python scripts/diff_bench.py BENCH_serving.json [BENCH_*.json ...]
+           [--warn-pct 20] [--strict] [--history BENCH_HISTORY.jsonl]
 
 The baseline for each file is the committed version at HEAD
 (``git show HEAD:<file>``) — i.e. the artifact the previous PR shipped.
+When HEAD carries no baseline (a brand-new suite, a rebase that dropped
+the artifact), the diff falls back to the most recent rows for the same
+suite in ``BENCH_HISTORY.jsonl`` (see ``scripts/bench_history.py``),
+excluding the current commit so a re-run never diffs against itself.
+
 Rows are matched by their ``config`` key; the primary metric is
 ``tokens_per_s`` when present (higher is better), else ``mean_s`` (lower
-is better).  Regressions beyond ``--warn-pct`` are flagged; the script
-always exits 0 (artifacts move with hardware — the diff is a trend
-signal, not a gate) unless ``--strict`` is given.
+is better), else a suite-specific ``extra`` metric.  Regressions beyond
+``--warn-pct`` are flagged.  Without ``--strict`` the script always
+exits 0 (the diff is a trend signal); with ``--strict`` flagged
+regressions fail, and so does a missing/unreadable artifact — CI just
+ran the suite, so "no file" means the bench step itself broke and must
+not pass silently.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import subprocess
 import sys
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_history  # noqa: E402  (sibling script, not a package)
 
 
 def _load_current(path: str) -> Optional[List[Dict]]:
@@ -37,37 +50,49 @@ def _load_baseline(path: str) -> Optional[List[Dict]]:
         return None
 
 
-# fallbacks for suites whose trend metric lives under "extra" (the
-# scheduler rows carry no timing — QoS error is their signal)
-_EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1))
+def _history_baseline(cur: List[Dict], history: str
+                      ) -> Optional[List[Dict]]:
+    """Most recent history rows for this artifact's suite (from the
+    current rows' ``bench`` key), excluding the in-flight commit."""
+    suites = {r.get("bench") for r in cur if r.get("bench")}
+    if len(suites) != 1:
+        return None
+    rows = bench_history.latest_rows(suites.pop(),
+                                     exclude_commit=bench_history.git_head(),
+                                     path=history)
+    if not rows:
+        return None
+    return [{"config": r["config"], "tokens_per_s": r.get("tokens_per_s",
+                                                          0.0),
+             "mean_s": r.get("mean_s", 0.0), "extra": r.get("extra", {})}
+            for r in rows]
 
 
-def _metric(row: Dict) -> Optional[tuple]:
-    tps = float(row.get("tokens_per_s", 0.0))
-    if tps > 0:
-        return "tokens_per_s", tps, +1          # higher is better
-    mean = float(row.get("mean_s", 0.0))
-    if mean > 0:
-        return "mean_s", mean, -1               # lower is better
-    extra = row.get("extra", {})
-    for key, sense in _EXTRA_METRICS:
-        if key in extra:
-            return key, float(extra[key]), sense
-    return None
+# one metric definition for both tools: tokens_per_s (higher better),
+# else mean_s (lower better), else bench_history.EXTRA_METRICS in order
+_metric = bench_history.metric_of
 
 
-def diff_file(path: str, warn_pct: float) -> int:
+def diff_file(path: str, warn_pct: float,
+              history: str = bench_history.HISTORY_PATH
+              ) -> Tuple[int, bool]:
+    """Returns (flagged regression count, artifact-missing flag)."""
     cur = _load_current(path)
     if cur is None:
         print(f"[diff] {path}: missing or unreadable — run the bench "
-              "suite first")
-        return 0
+              "suite first (FAILS under --strict)")
+        return 0, True
     base = _load_baseline(path)
+    src = "HEAD"
+    if base is None:
+        base = _history_baseline(cur, history)
+        src = f"history ({history})"
     print(f"\n## bench diff: {path}")
     if base is None:
-        print(f"  no committed baseline at HEAD (new artifact, "
-              f"{len(cur)} rows) — nothing to diff")
-        return 0
+        print(f"  no committed baseline at HEAD and no history rows "
+              f"(new artifact, {len(cur)} rows) — nothing to diff")
+        return 0, False
+    print(f"  baseline: {src}")
     base_by = {r["config"]: r for r in base if "config" in r}
     regressions = 0
     for row in cur:
@@ -100,7 +125,7 @@ def diff_file(path: str, warn_pct: float) -> int:
               f"({delta:+.1f}%){flag}")
     for cfgk in base_by:
         print(f"  {cfgk:<28} REMOVED (was in previous artifact)")
-    return regressions
+    return regressions, False
 
 
 def main(argv=None) -> int:
@@ -109,12 +134,25 @@ def main(argv=None) -> int:
     ap.add_argument("--warn-pct", type=float, default=20.0,
                     help="flag regressions beyond this percentage")
     ap.add_argument("--strict", action="store_true",
-                    help="exit non-zero when regressions are flagged")
+                    help="exit non-zero on flagged regressions AND on "
+                         "missing artifacts")
+    ap.add_argument("--history", default=bench_history.HISTORY_PATH,
+                    help="JSONL history store used when HEAD has no "
+                         "baseline for an artifact")
     args = ap.parse_args(argv)
-    total = sum(diff_file(f, args.warn_pct) for f in args.files)
+    total = 0
+    missing: List[str] = []
+    for f in args.files:
+        regs, miss = diff_file(f, args.warn_pct, history=args.history)
+        total += regs
+        if miss:
+            missing.append(f)
     if total:
         print(f"\n[diff] {total} flagged regression(s) "
               f"(> {args.warn_pct:.0f}%)")
+    if missing and args.strict:
+        print(f"[diff] STRICT: missing artifact(s): {', '.join(missing)}")
+        return 1
     return 1 if (total and args.strict) else 0
 
 

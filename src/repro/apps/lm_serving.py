@@ -70,6 +70,9 @@ class _EngineHolder:
                          top_k=int(top_k), top_p=top_p)
         while eng.pending():
             eng.step()
+            # decode-step checkpoint: a long serve loop on this slot's
+            # lane yields here to higher-priority granted work
+            vfpga.checkpoint()
         req = next(r for r in eng.completed if r.rid == rid)
         iface.irq.raise_irq(rid)           # completion interrupt
         return req.out_tokens

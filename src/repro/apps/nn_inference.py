@@ -91,6 +91,7 @@ class CoyoteOverlay:
         """The user logic's stream loop: upload batch i+1 while batch i
         computes (async dispatch), one sync per completed batch."""
         batch_size = max(iface.csr.get_csr(CSR_NN_BATCH, 256), 1)
+        vf = self.shell.vfpgas[self.slot]
         outs = []
         pending = None
         for i in range(0, X.shape[0], batch_size):
@@ -99,6 +100,7 @@ class CoyoteOverlay:
             if pending is not None:
                 outs.append(np.asarray(pending))       # sync previous
             pending = y
+            vf.checkpoint()        # stream-batch preemption checkpoint
         if pending is not None:
             outs.append(np.asarray(pending))
         return np.concatenate(outs, axis=0)

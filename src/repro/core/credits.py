@@ -40,13 +40,18 @@ class CreditAccount:
     """Per-(vFPGA, stream) credit pool; capacity == destination queue depth.
 
     Requests acquire one credit per packet and block (back-pressure onto the
-    requester) when exhausted; completions replenish."""
+    requester) when exhausted; completions replenish.  ``on_release`` (if
+    given) fires after every replenish, outside the account's lock — the
+    shell scheduler uses it to wake its issue loop when an executor lane
+    returns credits asynchronously."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int,
+                 on_release: Optional[Callable[[], None]] = None):
         self.capacity = capacity
         self._avail = capacity
         self._cv = threading.Condition()
         self.stalls = 0
+        self.on_release = on_release
 
     def acquire(self, n: int = 1, timeout: Optional[float] = None) -> bool:
         deadline = None if timeout is None else time.perf_counter() + timeout
@@ -73,6 +78,9 @@ class CreditAccount:
         with self._cv:
             self._avail = min(self._avail + n, self.capacity)
             self._cv.notify_all()
+        if self.on_release is not None:
+            self.on_release()       # outside the lock: the callback may
+                                    # take the scheduler's own lock
 
     @property
     def available(self) -> int:

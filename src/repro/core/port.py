@@ -38,6 +38,7 @@ from enum import Enum
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.interfaces import Completion, Oper, SgEntry
+from repro.core.scheduler import SHARED_LANE_SLOT_BASE
 
 
 class PortState(Enum):
@@ -86,6 +87,14 @@ class Invocation:
                        serving engine's decode-step billing path);
       * ``"method"`` — a named operation on a service port, with
                        ``args``/``kwargs``.
+
+    ``priority`` and ``deadline_s`` are the SLO hook: execution on the
+    slot's lane runs higher priorities first (earliest relative deadline
+    breaks ties among equals), and a long-running lower-priority batch
+    yields to them at its checkpoint boundaries
+    (:meth:`ShellScheduler.checkpoint`).  Neither field changes what the
+    DWRR arbiter *grants* nor what the tenant is *billed* — fairness and
+    accounting are priority-blind.
     """
     kind: str = "sg"
     op: Oper = Oper.KERNEL
@@ -97,25 +106,32 @@ class Invocation:
     stream: int = 0
     tid: int = 0
     tenant: Optional[str] = None
+    priority: int = 0                       # higher runs first on the lane
+    deadline_s: Optional[float] = None      # relative SLO (seconds)
     meta: Dict[str, Any] = field(default_factory=dict)
     ticket: int = -1                        # assigned by the port
 
     @classmethod
-    def from_sg(cls, sg: SgEntry) -> "Invocation":
+    def from_sg(cls, sg: SgEntry, *, priority: int = 0,
+                deadline_s: Optional[float] = None) -> "Invocation":
         return cls(kind="sg", op=sg.opcode, sg=sg, nbytes=max(sg.length, 1),
-                   stream=sg.src_stream, tid=sg.tid)
+                   stream=sg.src_stream, tid=sg.tid, priority=priority,
+                   deadline_s=deadline_s)
 
     @classmethod
     def io(cls, nbytes: int, *, stream: int = 0, tag: str = "io",
-           tenant: Optional[str] = None) -> "Invocation":
+           tenant: Optional[str] = None, priority: int = 0,
+           deadline_s: Optional[float] = None) -> "Invocation":
         return cls(kind="io", op=Oper.LOCAL_TRANSFER, nbytes=max(nbytes, 1),
-                   stream=stream, tenant=tenant, meta={"tag": tag})
+                   stream=stream, tenant=tenant, meta={"tag": tag},
+                   priority=priority, deadline_s=deadline_s)
 
     @classmethod
     def call(cls, method: str, *args: Any, nbytes: int = 0,
+             priority: int = 0, deadline_s: Optional[float] = None,
              **kwargs: Any) -> "Invocation":
         return cls(kind="method", method=method, args=args, kwargs=kwargs,
-                   nbytes=nbytes)
+                   nbytes=nbytes, priority=priority, deadline_s=deadline_s)
 
     def to_sg(self) -> SgEntry:
         if self.sg is not None:
@@ -341,7 +357,8 @@ class VFpgaPort(Port):
             shell.scheduler.submit(
                 slot=vf.slot, stream=sg.src_stream, ticket=inv.ticket,
                 sg=sg, execute=vf.execute_sg, complete=complete,
-                tenant=inv.tenant)
+                tenant=inv.tenant, priority=inv.priority,
+                deadline_s=inv.deadline_s)
 
     def _dispatch_io(self, inv: Invocation, fut: PortFuture, shell) -> None:
         t0 = time.perf_counter()
@@ -358,7 +375,8 @@ class VFpgaPort(Port):
         shell.scheduler.submit_io(
             inv.nbytes, slot=self.vfpga.slot, stream=inv.stream,
             tenant=inv.tenant, tag=inv.meta.get("tag", "io"),
-            wait=False, on_done=done)
+            wait=False, on_done=done, priority=inv.priority,
+            deadline_s=inv.deadline_s)
 
     # ------------------------------------------------------ capabilities ---
     def capabilities(self) -> PortCapabilities:
@@ -401,7 +419,10 @@ class VFpgaPort(Port):
 
 # Synthetic "slot" ids for service ports: services are not application
 # slots, but billing through the scheduler wants a stable requester key.
-SERVICE_SLOT_BASE = 1000
+# Defined BY the scheduler's shared-lane threshold so service-call
+# execution always rides the shared service lane instead of minting one
+# lane thread per service.
+SERVICE_SLOT_BASE = SHARED_LANE_SLOT_BASE
 
 
 class ServicePort(Port):
@@ -458,7 +479,8 @@ class ServicePort(Port):
             execute=execute,
             complete=lambda comp, inv=inv, fut=fut:
                 self._finish(inv, fut, comp),
-            tenant=inv.tenant or self.tenant)
+            tenant=inv.tenant or self.tenant, priority=inv.priority,
+            deadline_s=inv.deadline_s)
 
     def capabilities(self) -> PortCapabilities:
         svc = self.service

@@ -23,9 +23,25 @@ event-driven subsystem in front of the link arbiter:
   * **Per-tenant QoS stats** — byte shares, weighted/unweighted Jain's
     fairness, mean submit→complete latency, and throughput, surfaced
     through ``Shell.status()["scheduler"]``.
+  * **Per-slot executor lanes** — the DWRR arbiter keeps deciding *what*
+    is granted (billing and fairness are unchanged), but granted work is
+    *executed* on per-slot worker lanes: one lane per vFPGA slot that has
+    traffic, plus one shared lane for service-port calls.  A long-running
+    app invocation on slot 0 (an lm_serving serve loop, a streaming NN
+    predict) therefore no longer delays slot 1's completions — execution
+    is parallel across slots while each (slot, stream) stays FIFO.
+  * **Cooperative preemption** — submissions carry ``priority`` and an
+    absolute ``deadline``; a lane runs the highest-priority stream-head
+    first (earliest deadline breaks ties), and a long-running invocation
+    that calls :meth:`ShellScheduler.checkpoint` at its natural
+    boundaries (decode step, stream batch) *holds* while queued
+    strictly-higher-priority work on its lane runs, then *resumes* — the
+    in-flight batch is preempted without ever being lost or duplicated
+    (the same hold-and-resume contract as the Port drain machinery).
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from collections import deque
@@ -36,6 +52,13 @@ from repro.core import credits as C
 from repro.core.interfaces import Completion, SgEntry
 
 DEFAULT_TENANT_PREFIX = "tenant"
+
+# Slots at or above this id are synthetic (service ports, see
+# ``repro.core.port.SERVICE_SLOT_BASE``): they share ONE executor lane —
+# service calls are short control operations, not long-running datapath
+# work, so a shared lane keeps thread count bounded.
+SHARED_LANE_SLOT_BASE = 1000
+SHARED_LANE_KEY = "service"
 
 
 @dataclass
@@ -84,6 +107,8 @@ class _Submission:
     complete: Optional[Callable[[Completion], None]] = None
     done_event: Optional[threading.Event] = None
     on_done: Optional[Callable[[], None]] = None
+    priority: int = 0
+    deadline: float = float("inf")           # absolute perf_counter time
 
 
 @dataclass
@@ -93,6 +118,176 @@ class _Batch:
     subs: List[_Submission]
     nbytes: int
     npkts: int
+    priority: int = 0
+    deadline: float = float("inf")
+
+
+@dataclass
+class _ExecTask:
+    """One granted batch awaiting execution on a lane."""
+    batch: _Batch
+    credit_cost: int
+    seq: int
+
+    @property
+    def priority(self) -> int:
+        return self.batch.priority
+
+    @property
+    def stream_key(self) -> Tuple[int, int]:
+        head = self.batch.subs[0]
+        return (head.slot, head.stream)
+
+    def order_key(self) -> Tuple[float, float, int]:
+        return (-self.batch.priority, self.batch.deadline, self.seq)
+
+
+class _ExecutorLane:
+    """One execution lane: a worker thread draining granted batches for
+    one vFPGA slot (or the shared service lane).
+
+    Scheduling inside a lane is priority-first (earliest deadline, then
+    grant order, break ties) over *stream heads*: a task is only eligible
+    while no earlier-granted task of the same (slot, stream) is still
+    queued, so the scheduler's per-stream FIFO guarantee survives
+    reordering across priorities."""
+
+    def __init__(self, key: Any, scheduler: "ShellScheduler"):
+        self.key = key
+        self.sched = scheduler
+        self._cv = threading.Condition()
+        self._queue: List[_ExecTask] = []
+        self._stop = False
+        self.current: Optional[_ExecTask] = None
+        # tasks held at checkpoints on this thread, outermost first; a
+        # preemptor must never share a stream with any of them (its
+        # same-stream predecessor is in flight, just not in _queue)
+        self._hold_chain: List[_ExecTask] = []
+        self.executed = 0
+        self.preempt_runs = 0            # tasks run inside a checkpoint hold
+        self.queue_peak = 0
+        self.busy_s = 0.0
+        self.thread = threading.Thread(
+            target=self._run, name=f"shell-lane-{key}", daemon=True)
+        self.thread.start()
+
+    # ------------------------------------------------------------ intake ---
+    def push(self, task: _ExecTask) -> None:
+        with self._cv:
+            self._queue.append(task)
+            self.queue_peak = max(self.queue_peak, len(self._queue))
+            self._cv.notify_all()
+
+    def _pop_locked(self, above_priority: Optional[int] = None,
+                    exclude_streams: Optional[Set[Tuple[int, int]]] = None
+                    ) -> Optional[_ExecTask]:
+        """Best eligible task: for each (slot, stream) only the earliest
+        queued task is a candidate (FIFO within a stream); among the
+        candidates the highest priority wins, then the earliest deadline,
+        then grant order.  ``above_priority`` restricts candidates to
+        strictly higher priorities and ``exclude_streams`` blocks streams
+        whose earlier batch is in flight on this thread (both together
+        form the preemption filter: priority reorders only ACROSS
+        streams, never within one)."""
+        best = None
+        seen: Set[Tuple[int, int]] = set(exclude_streams or ())
+        for i, t in enumerate(self._queue):
+            sk = t.stream_key
+            if sk in seen:
+                continue
+            seen.add(sk)
+            if above_priority is not None and t.priority <= above_priority:
+                continue
+            if best is None or t.order_key() < self._queue[best].order_key():
+                best = i
+        if best is None:
+            return None
+        return self._queue.pop(best)
+
+    # ------------------------------------------------------------ worker ---
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(timeout=0.25)
+                if self._stop and not self._queue:
+                    return
+                task = self._pop_locked()
+            if task is not None:
+                self._execute(task)
+
+    def _execute(self, task: _ExecTask) -> None:
+        prev = self.current
+        with self._cv:                  # _hold_chain/current are read by
+            self.current = task         # cross-thread probes under _cv
+            self._hold_chain.append(task)
+        t0 = time.perf_counter()
+        try:
+            self.sched._execute_batch(task.batch, task.credit_cost)
+        finally:
+            self.busy_s += time.perf_counter() - t0
+            self.executed += 1
+            with self._cv:
+                self._hold_chain.pop()
+                self.current = prev
+
+    # -------------------------------------------------------- preemption ---
+    def run_preemptors(self) -> int:
+        """Checkpoint body: while queued work outranks the in-flight task,
+        run it inline (the in-flight batch HOLDS here and RESUMES after).
+        Work sharing a (slot, stream) with any held batch is never
+        eligible — its same-stream predecessor is mid-flight, and
+        per-stream FIFO is inviolable.  Only meaningful on the lane's
+        own thread."""
+        cur = self.current
+        if cur is None:
+            return 0
+        ran = 0
+        while True:
+            with self._cv:
+                held = {t.stream_key for t in self._hold_chain}
+                task = self._pop_locked(above_priority=cur.priority,
+                                        exclude_streams=held)
+            if task is None:
+                return ran
+            self.preempt_runs += 1
+            ran += 1
+            self._execute(task)
+
+    def pending_above(self, priority: int) -> bool:
+        with self._cv:
+            held = {t.stream_key for t in self._hold_chain}
+            return any(t.priority > priority
+                       and t.stream_key not in held for t in self._queue)
+
+    def preempt_pending(self) -> bool:
+        """Coherent probe: is queued work outranking the in-flight task
+        (one lock, so current and queue are read consistently)?"""
+        with self._cv:
+            cur = self.current
+            if cur is None:
+                return False
+            held = {t.stream_key for t in self._hold_chain}
+            return any(t.priority > cur.priority
+                       and t.stream_key not in held for t in self._queue)
+
+    # ----------------------------------------------------------- teardown --
+    def close(self, timeout: float = 2.0) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self.thread.join(timeout=timeout)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._cv:
+            qlen = len(self._queue)
+            cur = self.current
+        return {"executed": self.executed, "queued": qlen,
+                "queue_peak": self.queue_peak,
+                "preempt_runs": self.preempt_runs,
+                "busy_s": self.busy_s,
+                "current_priority": (cur.priority if cur is not None
+                                     else None)}
 
 
 class ShellScheduler:
@@ -103,8 +298,16 @@ class ShellScheduler:
                  stream_depth: int = 64,
                  coalesce: bool = True,
                  max_batch_entries: int = 16,
-                 max_pending_per_tenant: Optional[int] = None):
+                 max_pending_per_tenant: Optional[int] = None,
+                 lanes: bool = True):
         self.arbiter = arbiter
+        # lanes=False serializes every execution on the scheduler worker
+        # (the pre-lane behavior) — kept as the A/B baseline for
+        # ``benchmarks/bench_multislot.py`` and the billing-parity tests.
+        self.lanes_enabled = lanes
+        self._lanes: Dict[Any, _ExecutorLane] = {}
+        self._lane_threads: Set[threading.Thread] = set()
+        self._exec_seq = itertools.count()
         self.packet_bytes = packet_bytes
         self.stream_depth = stream_depth
         self.coalesce = coalesce
@@ -149,15 +352,23 @@ class ShellScheduler:
             if t is None:
                 t = Tenant(name=name, weight=weight)
                 t.credits = C.CreditAccount(
-                    max(1, int(round(self.stream_depth * weight))))
+                    max(1, int(round(self.stream_depth * weight))),
+                    on_release=self._credits_released)
                 self._tenants[name] = t
                 self._tenant_requesters.setdefault(name, set())
             elif t.weight != weight:
                 t.weight = weight
                 t.credits = C.CreditAccount(
-                    max(1, int(round(self.stream_depth * weight))))
+                    max(1, int(round(self.stream_depth * weight))),
+                    on_release=self._credits_released)
                 self._rebalance_weights(name)
         return t
+
+    def _credits_released(self) -> None:
+        """Lane threads release credits asynchronously now; wake the
+        issue loop so credit-blocked streams are revisited promptly."""
+        with self._lock:
+            self._work_cv.notify_all()
 
     def bind_slot(self, slot: int, tenant: str) -> None:
         """Route all submissions from a vFPGA slot to the named tenant."""
@@ -219,22 +430,35 @@ class ShellScheduler:
     def submit(self, *, slot: int, stream: int, ticket: int, sg: SgEntry,
                execute: Callable[[int, SgEntry], Completion],
                complete: Callable[[Completion], None],
-               tenant: Optional[str] = None) -> None:
+               tenant: Optional[str] = None,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> None:
         """Enqueue one SG descriptor (any thread; blocks only when the
-        tenant exceeds its pending bound — submitter-side back-pressure)."""
+        tenant exceeds its pending bound — submitter-side back-pressure).
+        ``priority`` orders execution on the slot's lane (higher first;
+        the DWRR grant order and billing are unaffected); ``deadline_s``
+        is a relative SLO in seconds breaking ties among equal
+        priorities (earliest absolute deadline first)."""
         ten = (self._tenant_by_name(tenant) if tenant is not None
                else self.tenant_of(slot))
+        t_sub = time.perf_counter()
         sub = _Submission(slot=slot, stream=stream, ticket=ticket, sg=sg,
                           tenant=ten, nbytes=max(sg.length, 1),
-                          t_submit=time.perf_counter(),
-                          execute=execute, complete=complete)
+                          t_submit=t_sub,
+                          execute=execute, complete=complete,
+                          priority=priority,
+                          deadline=(t_sub + deadline_s
+                                    if deadline_s is not None
+                                    else float("inf")))
         self._enqueue(sub)
 
     def submit_io(self, nbytes: int, *, slot: int = 0, stream: int = 0,
                   tenant: Optional[str] = None, tag: str = "io",
                   wait: bool = False,
                   timeout: Optional[float] = None,
-                  on_done: Optional[Callable[[], None]] = None
+                  on_done: Optional[Callable[[], None]] = None,
+                  priority: int = 0,
+                  deadline_s: Optional[float] = None
                   ) -> threading.Event:
         """Enqueue a raw transfer with no SG execution behind it — the path
         the serving engine uses to push its decode-step I/O through the
@@ -243,13 +467,15 @@ class ShellScheduler:
         link, on whichever thread completed them."""
         ten = (self._tenant_by_name(tenant) if tenant is not None
                else self.tenant_of(slot))
-        if (self._worker is not None
-                and threading.current_thread() is self._worker):
+        if self._on_executor_thread():
             # Re-entrant submission from inside an executing batch (e.g. a
-            # serving app's decode loop running under execute_sg): waiting
-            # on our own thread would deadlock, so bill the link and the
-            # tenant inline.  Bytes still land in the arbiter's delivered
-            # table so tenant totals and arbiter totals stay reconciled.
+            # serving app's decode loop running under execute_sg, on the
+            # scheduler worker or on a lane): waiting on our own thread
+            # would deadlock, so bill the link and the tenant inline.
+            # Bytes still land in the arbiter's delivered table so tenant
+            # totals and arbiter totals stay reconciled.  Lanes-on and
+            # lanes-off take the same path here, so billed totals are
+            # identical in both modes.
             t_sub = time.perf_counter()
             requester = f"{ten.name}/vfpga{slot}.s{stream}:inline"
             with self._lock:
@@ -258,32 +484,46 @@ class ShellScheduler:
                 ten.submissions += 1
             self.arbiter.link.transfer(max(nbytes, 1), src=requester,
                                        tag=tag)
-            self.arbiter.delivered[requester] = (
-                self.arbiter.delivered.get(requester, 0) + max(nbytes, 1))
             now = time.perf_counter()
-            ten.completions += 1
-            ten.bytes_done += max(nbytes, 1)
-            ten.lat_sum_s += now - t_sub
-            ten.t_last_done = now
+            with self._lock:
+                self.arbiter.delivered[requester] = (
+                    self.arbiter.delivered.get(requester, 0)
+                    + max(nbytes, 1))
+                ten.completions += 1
+                ten.bytes_done += max(nbytes, 1)
+                ten.lat_sum_s += now - t_sub
+                ten.t_last_done = now
             ev = threading.Event()
             ev.set()
             if on_done is not None:
                 on_done()
             return ev
+        t_sub = time.perf_counter()
         sg = SgEntry(length=max(nbytes, 1), src_stream=stream,
                      meta={"tag": tag})
         sub = _Submission(slot=slot, stream=stream, ticket=-1, sg=sg,
                           tenant=ten, nbytes=max(nbytes, 1),
-                          t_submit=time.perf_counter(),
-                          done_event=threading.Event(), on_done=on_done)
+                          t_submit=t_sub,
+                          done_event=threading.Event(), on_done=on_done,
+                          priority=priority,
+                          deadline=(t_sub + deadline_s
+                                    if deadline_s is not None
+                                    else float("inf")))
         self._enqueue(sub)
         if wait:
             sub.done_event.wait(timeout=timeout)
         return sub.done_event
 
+    def _on_executor_thread(self) -> bool:
+        """True on the scheduler worker or any executor lane thread —
+        the threads that drain work and must never block on themselves."""
+        cur = threading.current_thread()
+        if self._worker is not None and cur is self._worker:
+            return True
+        return cur in self._lane_threads
+
     def _enqueue(self, sub: _Submission) -> None:
-        on_worker = (self._worker is not None
-                     and threading.current_thread() is self._worker)
+        on_worker = self._on_executor_thread()
         with self._lock:
             # submitter-side back-pressure: an over-subscribed tenant
             # stalls itself, never the link or other tenants.  Skipped
@@ -338,6 +578,8 @@ class ShellScheduler:
             self._work_cv.notify_all()
         if self._worker is not None:
             self._worker.join(timeout=2.0)
+        for lane in list(self._lanes.values()):
+            lane.close()
 
     # ------------------------------------------------------------- worker --
     def _ensure_worker_locked(self) -> None:
@@ -371,10 +613,11 @@ class ShellScheduler:
                         if not self._has_ready():
                             self._idle_cv.notify_all()
                             break
-                    # ready work exists but was credit-blocked with an idle
-                    # arbiter: impossible by construction (credits release
-                    # inside arbiter.drain()), but never spin.
-                    time.sleep(0.001)
+                        # ready work exists but is credit-blocked with an
+                        # idle arbiter: credits are held by batches still
+                        # executing on lanes.  Wait for a release
+                        # (CreditAccount.on_release notifies _work_cv).
+                        self._work_cv.wait(timeout=0.05)
 
     def _has_ready(self) -> bool:
         return any(self._pend.get(k) for k in self._pend_order)
@@ -391,21 +634,28 @@ class ShellScheduler:
     def _form_batch(self, q: Deque[_Submission]) -> _Batch:
         """Pop a FIFO prefix of the stream queue: either one large entry or
         several small ones coalesced up to one packet / max_batch_entries.
-        FIFO pop + single-requester submit = no same-stream reordering."""
+        FIFO pop + single-requester submit = no same-stream reordering.
+        Coalescing never crosses a priority boundary — a batch has ONE
+        priority, so lane-level preemption can never invert priorities
+        inside a merged batch."""
         head = q.popleft()
         subs = [head]
         nbytes = head.nbytes
+        deadline = head.deadline
         if self.coalesce:
             while (q and len(subs) < self.max_batch_entries
+                   and q[0].priority == head.priority
                    and nbytes + q[0].nbytes <= self.packet_bytes):
                 nxt = q.popleft()
                 subs.append(nxt)
                 nbytes += nxt.nbytes
+                deadline = min(deadline, nxt.deadline)
         tenant = head.tenant
         requester = f"{tenant.name}/vfpga{head.slot}.s{head.stream}"
         npkts = max(len(C.packetize(nbytes, self.packet_bytes)), 1)
         return _Batch(tenant=tenant, requester=requester, subs=subs,
-                      nbytes=nbytes, npkts=npkts)
+                      nbytes=nbytes, npkts=npkts, priority=head.priority,
+                      deadline=deadline)
 
     def _issue_ready(self) -> int:
         """Form batches from every stream queue head whose tenant has
@@ -456,10 +706,32 @@ class ShellScheduler:
                             on_done=done)
 
     def _complete_batch(self, batch: _Batch, credit_cost: int) -> None:
-        """Runs on the scheduler thread when the batch's last packet clears
-        the link: execute each SG in submission order, complete CQs,
-        release credits, update tenant QoS counters."""
-        now = time.perf_counter()
+        """Runs on the scheduler thread when the batch's last packet
+        clears the link.  The grant is done — now route *execution*:
+        batches carrying SG work go to their slot's executor lane (so a
+        long invocation on one slot never delays another slot's
+        completions); pure-I/O batches (no execute callable — the
+        serving engine's decode billing) finish inline, so their futures
+        resolve even while every lane is busy with long work.
+
+        Consequence, by design: a pure-I/O completion is a link
+        accounting record and is NOT ordered relative to SG *execution*
+        on the same (slot, stream) — the per-stream FIFO contract covers
+        SG execution order; an I/O future must never be used as a
+        barrier for earlier SG work (a batch that mixes both kinds rides
+        the lane as one unit and stays internally ordered)."""
+        if self.lanes_enabled and any(s.execute is not None
+                                      for s in batch.subs):
+            self._lane_for(batch.subs[0].slot).push(_ExecTask(
+                batch=batch, credit_cost=credit_cost,
+                seq=next(self._exec_seq)))
+            return
+        self._execute_batch(batch, credit_cost)
+
+    def _execute_batch(self, batch: _Batch, credit_cost: int) -> None:
+        """Execute each SG in submission order, complete CQs, release
+        credits, update tenant QoS counters.  Runs on a lane thread
+        (lanes on) or the scheduler worker (lanes off / pure I/O)."""
         ten = batch.tenant
         for sub in batch.subs:
             if sub.execute is not None:
@@ -472,18 +744,65 @@ class ShellScheduler:
                 try:
                     sub.on_done()
                 except Exception:   # noqa: BLE001 — a bad callback must
-                    pass            # never kill the scheduler thread
-            ten.completions += 1
-            ten.lat_sum_s += now - sub.t_submit
-        ten.batches += 1
-        ten.bytes_done += batch.nbytes
-        ten.t_last_done = now
+                    pass            # never kill an executor thread
+        now = time.perf_counter()
         ten.credits.release(credit_cost)
         with self._lock:
+            for sub in batch.subs:
+                ten.completions += 1
+                ten.lat_sum_s += now - sub.t_submit
+            ten.batches += 1
+            ten.bytes_done += batch.nbytes
+            ten.t_last_done = now
             ten.pending -= len(batch.subs)
             self._inflight -= len(batch.subs)
             # wakes both drain() waiters and back-pressured submitters
             self._idle_cv.notify_all()
+
+    # -------------------------------------------------- executor lanes -----
+    @staticmethod
+    def _lane_key(slot: int) -> Any:
+        return SHARED_LANE_KEY if slot >= SHARED_LANE_SLOT_BASE else slot
+
+    def _lane_for(self, slot: int) -> _ExecutorLane:
+        key = self._lane_key(slot)
+        with self._lock:
+            lane = self._lanes.get(key)
+            if lane is None:
+                lane = _ExecutorLane(key, self)
+                self._lanes[key] = lane
+                self._lane_threads.add(lane.thread)
+        return lane
+
+    def checkpoint(self, slot: int) -> int:
+        """Cooperative preemption point for long-running invocations.
+
+        Called from inside an executing invocation (decode-step /
+        stream-batch granularity): if strictly-higher-priority granted
+        work is queued on this slot's lane, it runs NOW on the calling
+        thread — the caller's batch holds here and resumes when the
+        call returns (zero lost, zero duplicated completions either
+        side).  A no-op (returns 0) off the lane's own thread, with
+        lanes disabled, or when nothing outranks the caller."""
+        if not self.lanes_enabled:
+            return 0
+        # lock-free read: _lanes is append-only and this runs once per
+        # decode step — taking the global scheduler lock here would
+        # serialize every serving loop against the intake/issue path
+        lane = self._lanes.get(self._lane_key(slot))
+        if lane is None or threading.current_thread() is not lane.thread:
+            return 0
+        return lane.run_preemptors()
+
+    def preempt_requested(self, slot: int) -> bool:
+        """True when work outranking the slot's in-flight batch waits on
+        its lane — the cheap probe form of :meth:`checkpoint`."""
+        if not self.lanes_enabled:
+            return False
+        lane = self._lanes.get(self._lane_key(slot))   # append-only dict
+        if lane is None:
+            return False
+        return lane.preempt_pending()
 
     # --------------------------------------------------------------- QoS ---
     def stats(self) -> Dict[str, Any]:
@@ -497,6 +816,8 @@ class ShellScheduler:
             s = t.stats()
             s["share"] = shares[n]
             per_tenant[n] = s
+        with self._lock:
+            lanes = {str(k): lane.stats() for k, lane in self._lanes.items()}
         return {
             "tenants": per_tenant,
             "jain_tenant": C.jains_index(shares),
@@ -504,4 +825,6 @@ class ShellScheduler:
             "total_bytes": sum(t.bytes_done for t in tenants.values()),
             "batches": self.batches_issued,
             "entries_coalesced": self.entries_coalesced,
+            "lanes_enabled": self.lanes_enabled,
+            "lanes": lanes,
         }

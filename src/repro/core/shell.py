@@ -60,6 +60,9 @@ class ShellConfig:
     stream_depth: int = 64
     hbm_budget: int = 1 << 32
     pcie_gbps: float = 12e9
+    # per-slot executor lanes (False serializes all execution on the
+    # scheduler worker — the pre-lane baseline, kept for A/B benches)
+    executor_lanes: bool = True
 
     @staticmethod
     def make(services: Dict[str, Any] = None, **kw) -> "ShellConfig":
@@ -93,7 +96,8 @@ class Shell:
                                            packet_bytes=config.packet_bytes)
         self.scheduler = ShellScheduler(self.arbiter,
                                         packet_bytes=config.packet_bytes,
-                                        stream_depth=config.stream_depth)
+                                        stream_depth=config.stream_depth,
+                                        lanes=config.executor_lanes)
         self.ports: Dict[str, Port] = {}     # unified port registry (v2)
         self.built = False
 

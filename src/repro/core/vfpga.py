@@ -78,6 +78,7 @@ class VFpga:
         self.hbm_used = 0
         self.load_history: List[Tuple[str, float]] = []
         self.tenant: Optional[str] = None   # QoS principal (shell scheduler)
+        self.preemptions = 0                # checkpoint yields taken here
         self._addr_map: Dict[int, np.ndarray] = {}   # cThread buffers
         self._next_vaddr = 0x1000
         self._port = None                   # lazily-created unified port
@@ -95,6 +96,28 @@ class VFpga:
         if shell is not None:
             shell._register_port(self._port)
         return self._port
+
+    # -- cooperative preemption (executor lanes) --------------------------------
+    def checkpoint(self) -> int:
+        """Preemption point for long-running user logic: call between
+        natural units of work (a decode step, one stream batch).  If
+        strictly-higher-priority granted work waits on this slot's
+        executor lane it runs now, on this thread, and this invocation
+        resumes afterwards (hold-and-resume).  Returns the number of
+        preempting batches run; 0 outside a lane or with lanes off."""
+        shell = getattr(self, "shell", None)
+        if shell is None:
+            return 0
+        ran = shell.scheduler.checkpoint(self.slot)
+        self.preemptions += ran
+        return ran
+
+    def preempt_requested(self) -> bool:
+        """Cheap probe: does higher-priority work wait on this slot's
+        lane?  Lets logic choose a cheaper checkpoint cadence."""
+        shell = getattr(self, "shell", None)
+        return (shell is not None
+                and shell.scheduler.preempt_requested(self.slot))
 
     # -- partial reconfiguration ------------------------------------------------
     def check_link(self, artifact: AppArtifact,
@@ -219,5 +242,6 @@ class VFpga:
         return {"slot": self.slot, "state": self.state.value,
                 "app": self.app.name if self.app else None,
                 "tenant": self.tenant,
+                "preemptions": self.preemptions,
                 "hbm_used": self.hbm_used, "hbm_budget": self.hbm_budget,
                 **self.iface.stats()}

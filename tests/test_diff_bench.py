@@ -1,0 +1,213 @@
+"""Unit tests for the bench trend tooling: scripts/diff_bench.py metric
+fallbacks, near-zero-baseline unit-scale deltas, REMOVED-row reporting,
+the --strict missing-artifact gate, and the bench_history store +
+fallback-baseline path."""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SCRIPTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "scripts")
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(_SCRIPTS, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault(name, mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_history = _load("bench_history")
+diff_bench = _load("diff_bench")
+
+
+def _row(config, tps=0.0, mean=0.0, extra=None, bench="bench_x"):
+    r = {"bench": bench, "config": config, "tokens_per_s": tps,
+         "mean_s": mean}
+    if extra:
+        r["extra"] = extra
+    return r
+
+
+# ============================================ _metric fallback chain =======
+def test_metric_prefers_tokens_per_s():
+    name, val, sense = diff_bench._metric(
+        _row("a", tps=100.0, mean=0.5, extra={"ratio_err_pct": 2.0}))
+    assert (name, val, sense) == ("tokens_per_s", 100.0, +1)
+
+
+def test_metric_falls_back_to_mean_s():
+    name, val, sense = diff_bench._metric(_row("a", mean=0.5))
+    assert (name, val, sense) == ("mean_s", 0.5, -1)
+
+
+def test_metric_falls_back_to_extras_in_order():
+    name, _, sense = diff_bench._metric(
+        _row("a", extra={"jain_weighted": 0.99, "ratio_err_pct": 1.0}))
+    assert (name, sense) == ("ratio_err_pct", -1)
+    name, _, sense = diff_bench._metric(
+        _row("a", extra={"jain_weighted": 0.99}))
+    assert (name, sense) == ("jain_weighted", +1)
+    name, _, sense = diff_bench._metric(
+        _row("a", extra={"p99_speedup_x": 12.0}))
+    assert (name, sense) == ("p99_speedup_x", +1)
+
+
+def test_metric_none_when_no_signal():
+    assert diff_bench._metric(_row("a", extra={"batch": 4})) is None
+
+
+# ============================================= diff_file behaviors =========
+def _diff(tmp_path, monkeypatch, capsys, cur, base, warn_pct=20.0):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps(cur))
+    monkeypatch.setattr(diff_bench, "_load_baseline", lambda path: base)
+    regs, missing = diff_bench.diff_file(str(p), warn_pct,
+                                         history=str(tmp_path / "no.jsonl"))
+    return regs, missing, capsys.readouterr().out
+
+
+def test_near_zero_baseline_compares_on_unit_scale(tmp_path, monkeypatch,
+                                                   capsys):
+    """A 0 -> 0.5 move on ratio_err_pct must read as +0.5 points (denom
+    1.0), not an infinite relative regression."""
+    cur = [_row("w3:1", extra={"ratio_err_pct": 0.5})]
+    base = [_row("w3:1", extra={"ratio_err_pct": 0.0})]
+    regs, missing, out = _diff(tmp_path, monkeypatch, capsys, cur, base,
+                               warn_pct=60.0)
+    assert not missing
+    assert regs == 0                       # 0.5 pts = +50.0% < 60% floor
+    assert "(+50.0%)" in out
+    # and beyond the floor it IS flagged
+    regs, _, out = _diff(tmp_path, monkeypatch, capsys, cur, base,
+                         warn_pct=10.0)
+    assert regs == 1 and "REGRESSION" in out
+
+
+def test_regression_flagging_respects_sense(tmp_path, monkeypatch, capsys):
+    # tokens_per_s: lower is worse
+    regs, _, out = _diff(tmp_path, monkeypatch, capsys,
+                         [_row("c", tps=50.0)], [_row("c", tps=100.0)])
+    assert regs == 1 and "REGRESSION" in out
+    # mean_s: higher is worse
+    regs, _, _ = _diff(tmp_path, monkeypatch, capsys,
+                       [_row("c", mean=2.0)], [_row("c", mean=1.0)])
+    assert regs == 1
+    # improvements never flag
+    regs, _, _ = _diff(tmp_path, monkeypatch, capsys,
+                       [_row("c", tps=200.0)], [_row("c", tps=100.0)])
+    assert regs == 0
+
+
+def test_removed_rows_are_reported(tmp_path, monkeypatch, capsys):
+    cur = [_row("kept", tps=10.0)]
+    base = [_row("kept", tps=10.0), _row("gone", tps=5.0)]
+    _, _, out = _diff(tmp_path, monkeypatch, capsys, cur, base)
+    assert "gone" in out and "REMOVED" in out
+
+
+def test_new_rows_are_reported_not_flagged(tmp_path, monkeypatch, capsys):
+    regs, _, out = _diff(tmp_path, monkeypatch, capsys,
+                         [_row("fresh", tps=10.0)], [])
+    assert regs == 0 and "NEW" in out
+
+
+# ======================================== --strict missing artifact ========
+def test_strict_fails_on_missing_artifact(tmp_path, monkeypatch):
+    missing = str(tmp_path / "BENCH_never_written.json")
+    assert diff_bench.main([missing]) == 0             # informational: ok
+    assert diff_bench.main([missing, "--strict"]) == 1  # gated: fail
+
+
+def test_strict_fails_on_flagged_regression(tmp_path, monkeypatch):
+    p = tmp_path / "BENCH_x.json"
+    p.write_text(json.dumps([_row("c", tps=50.0)]))
+    monkeypatch.setattr(diff_bench, "_load_baseline",
+                        lambda path: [_row("c", tps=100.0)])
+    assert diff_bench.main([str(p)]) == 0
+    assert diff_bench.main([str(p), "--strict"]) == 1
+    assert diff_bench.main([str(p), "--strict", "--warn-pct", "60"]) == 0
+
+
+# ================================================ history store ============
+def test_history_append_dedupes_and_trend(tmp_path, capsys):
+    hist = str(tmp_path / "H.jsonl")
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps([_row("c1", tps=100.0),
+                               _row("c2", mean=0.2)]))
+    bench_history.append([str(art)], commit="aaa", path=hist)
+    art.write_text(json.dumps([_row("c1", tps=110.0)]))
+    bench_history.append([str(art)], commit="aaa", path=hist)  # replaces
+    art.write_text(json.dumps([_row("c1", tps=120.0)]))
+    bench_history.append([str(art)], commit="bbb", path=hist)
+    rows = bench_history.load_history(hist)
+    aaa_c1 = [r for r in rows if r["commit"] == "aaa"
+              and r["config"] == "c1"]
+    assert len(aaa_c1) == 1 and aaa_c1[0]["tokens_per_s"] == 110.0
+    capsys.readouterr()
+    bench_history.trend(suite="bench_x", config="c1", path=hist)
+    out = capsys.readouterr().out
+    assert "110" in out and "120" in out
+
+
+def test_history_latest_rows_excludes_current_commit(tmp_path):
+    hist = str(tmp_path / "H.jsonl")
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps([_row("c1", tps=100.0)]))
+    bench_history.append([str(art)], commit="old", path=hist)
+    art.write_text(json.dumps([_row("c1", tps=200.0)]))
+    bench_history.append([str(art)], commit="cur", path=hist)
+    rows = bench_history.latest_rows("bench_x", exclude_commit="cur",
+                                     path=hist)
+    assert rows is not None and rows[0]["tokens_per_s"] == 100.0
+    assert bench_history.latest_rows("bench_x", exclude_commit=None,
+                                     path=hist)[0]["tokens_per_s"] == 200.0
+    assert bench_history.latest_rows("bench_zzz", path=hist) is None
+
+
+def test_diff_falls_back_to_history_baseline(tmp_path, monkeypatch,
+                                             capsys):
+    """No committed baseline at HEAD -> the history store supplies one
+    (the 'more than one PR back' path)."""
+    hist = str(tmp_path / "H.jsonl")
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps([_row("c1", tps=100.0)]))
+    bench_history.append([str(art)], commit="prev", path=hist)
+    art.write_text(json.dumps([_row("c1", tps=50.0)]))   # regressed 2x
+    monkeypatch.setattr(diff_bench, "_load_baseline", lambda path: None)
+    monkeypatch.setattr(diff_bench.bench_history, "git_head",
+                        lambda default="unknown": "cur")
+    regs, missing = diff_bench.diff_file(str(art), 20.0, history=hist)
+    out = capsys.readouterr().out
+    assert not missing and regs == 1
+    assert "history" in out and "REGRESSION" in out
+
+
+def test_history_rebench_of_old_commit_does_not_become_baseline(tmp_path):
+    """Re-running CI on an old checkout rewrites its rows at the file
+    end, but the newest-first-seen commit must stay the fallback
+    baseline (first-seen timestamps are preserved across re-appends)."""
+    hist = str(tmp_path / "H.jsonl")
+    art = tmp_path / "BENCH_x.json"
+    art.write_text(json.dumps([_row("c1", tps=100.0)]))
+    bench_history.append([str(art)], commit="old", path=hist)
+    art.write_text(json.dumps([_row("c1", tps=200.0)]))
+    bench_history.append([str(art)], commit="new", path=hist)
+    art.write_text(json.dumps([_row("c1", tps=105.0)]))
+    bench_history.append([str(art)], commit="old", path=hist)  # re-bench
+    rows = bench_history.latest_rows("bench_x", path=hist)
+    assert rows[0]["tokens_per_s"] == 200.0     # still commit "new"
+
+
+def test_history_survives_corrupt_lines(tmp_path):
+    hist = tmp_path / "H.jsonl"
+    hist.write_text('{"commit": "a", "suite": "s", "config": "c", '
+                    '"tokens_per_s": 1.0, "mean_s": 0.0}\n'
+                    "{truncated garbage\n")
+    rows = bench_history.load_history(str(hist))
+    assert len(rows) == 1 and rows[0]["commit"] == "a"
