@@ -1,0 +1,175 @@
+"""Live tenant migration: downtime vs KV footprint + bystander impact.
+
+A paged LM-serving tenant is migrated back and forth between two shells
+mid-decode (``repro.core.migrate.migrate``).  For each tenant KV
+footprint the suite reports the migration downtime distribution
+(p50/p99 over repeated moves — intake hold at the source to held-replay
+done at the destination) and the snapshot payload size.  A final pair of
+rows measures a BYSTANDER tenant's closed-loop latency on the
+destination shell with and without a migration storm running — the
+paper-style non-interference claim: migrating one tenant must not
+disturb another's p99.
+
+Writes ``BENCH_migrate.json`` (via benchmarks.run); the trend metric is
+``mean_s`` = mean downtime (lower is better).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common  # noqa: F401  (JAX_PLATFORMS pin)
+
+PAGE = 16
+POOL = 256
+N_MIGRATIONS = 6          # moves per footprint (3 round trips)
+N_PROBE = 60              # bystander closed-loop requests
+
+
+def _mk_shell(n_vfpgas=2):
+    from repro.core import Shell, ShellConfig
+    from repro.core.services import MMUConfig
+    s = Shell(ShellConfig.make(
+        services={"mmu": MMUConfig(page_size=PAGE, n_pages=POOL)},
+        n_vfpgas=n_vfpgas))
+    s.build()
+    return s
+
+
+def _mk_engine(cfg, params, shell):
+    from repro.serve.engine import ServingEngine
+    return ServingEngine(cfg, params, shell.services.get("mmu"),
+                         max_batch=4, max_len=512, shell=shell, slot=0,
+                         tenant="gold")
+
+
+def _percentiles(xs: List[float]) -> Dict[str, float]:
+    a = np.asarray(xs) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p99_ms": float(np.percentile(a, 99)),
+            "mean_ms": float(a.mean())}
+
+
+def _migrate_loop(cfg, params, prompts: List[List[int]],
+                  bystander: bool = False) -> Dict[str, float]:
+    """Run N_MIGRATIONS moves of a live tenant between two shells;
+    optionally probe a bystander tenant's latency on shell B meanwhile."""
+    from repro.core import (AppArtifact, Invocation, Oper, SgEntry,
+                            migrate)
+    a, b = _mk_shell(), _mk_shell()
+    eng_a, eng_b = _mk_engine(cfg, params, a), _mk_engine(cfg, params, b)
+    for p in prompts:
+        eng_a.submit(p, max_new_tokens=64)
+    for _ in range(3):
+        eng_a.step()                       # live mid-decode state
+
+    probe_lat: List[float] = []
+    stop = threading.Event()
+    if bystander:
+        b.register_tenant("bronze", 1.0, slots=(1,))
+        b.load_app(1, AppArtifact(name="echo", fn=lambda i, v, x: x))
+        port = b.attach(1)
+
+        def probe():
+            while not stop.is_set() and len(probe_lat) < N_PROBE:
+                t0 = time.perf_counter()
+                comp = port.submit(Invocation.from_sg(SgEntry(
+                    src=np.zeros(256, np.uint8), length=256,
+                    opcode=Oper.LOCAL_TRANSFER))).result(timeout=60.0)
+                assert comp.ok
+                probe_lat.append(time.perf_counter() - t0)
+        th = threading.Thread(target=probe)
+        th.start()
+
+    downtimes, payload = [], 0
+    pages = 0
+    shells = [(a, b, eng_b), (b, a, eng_a)]
+    for k in range(2):                     # untimed warmup round trip:
+        src, dst, dst_eng = shells[k % 2]  # compiles the gather/scatter
+        migrate(src, dst, "gold")          # shapes for this footprint
+        for _ in range(2):
+            dst_eng.step()
+    for k in range(N_MIGRATIONS):
+        src, dst, dst_eng = shells[k % 2]
+        rep = migrate(src, dst, "gold")
+        downtimes.append(rep.downtime_s)
+        payload = rep.payload_bytes
+        pages = rep.n_pages
+        for _ in range(2):                 # keep decoding between moves
+            dst_eng.step()
+    if bystander:
+        stop.set()
+        th.join()
+        b.drain()
+    a.close()
+    b.close()
+    out = {**_percentiles(downtimes), "mean_s": float(np.mean(downtimes)),
+           "kv_pages": pages, "payload_mb": payload / 1e6,
+           "migrations": N_MIGRATIONS}
+    if probe_lat:
+        bp = _percentiles(probe_lat)
+        out.update({"bystander_p50_ms": bp["p50_ms"],
+                    "bystander_p99_ms": bp["p99_ms"],
+                    "bystander_mean_ms": bp["mean_ms"],
+                    "probes": len(probe_lat)})
+    return out
+
+
+def _bystander_baseline() -> Dict[str, float]:
+    """The probe alone (no migration storm) — the comparison point."""
+    from repro.core import AppArtifact, Invocation, Oper, SgEntry
+    b = _mk_shell()
+    b.register_tenant("bronze", 1.0, slots=(1,))
+    b.load_app(1, AppArtifact(name="echo", fn=lambda i, v, x: x))
+    port = b.attach(1)
+    lats = []
+    for _ in range(N_PROBE):
+        t0 = time.perf_counter()
+        comp = port.submit(Invocation.from_sg(SgEntry(
+            src=np.zeros(256, np.uint8), length=256,
+            opcode=Oper.LOCAL_TRANSFER))).result(timeout=60.0)
+        assert comp.ok
+        lats.append(time.perf_counter() - t0)
+    b.drain()
+    b.close()
+    p = _percentiles(lats)
+    # mean_s = p99, matching the during-migration row's gate metric
+    return {"mean_s": p["p99_ms"] / 1e3, **p, "probes": N_PROBE}
+
+
+def run() -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+
+    rows = []
+    footprints = {
+        "small": [list(range(3, 3 + n)) for n in (12, 20)],
+        "large": [list(range(3, 3 + n)) for n in (120, 200, 160)],
+    }
+    for name, prompts in footprints.items():
+        r = _migrate_loop(cfg, params, prompts)
+        rows.append({"config": f"downtime/kv_{name}", **r})
+    storm = _migrate_loop(cfg, params, footprints["large"],
+                          bystander=True)
+    # mean_s carries the p99 (the non-interference gate metric: a
+    # migration storm must not blow up a bystander's tail latency)
+    rows.append({"config": "bystander/during_migration",
+                 "mean_s": storm["bystander_p99_ms"] / 1e3,
+                 "p50_ms": storm["bystander_p50_ms"],
+                 "p99_ms": storm["bystander_p99_ms"],
+                 "mean_ms": storm["bystander_mean_ms"],
+                 "probes": storm.get("probes", 0)})
+    rows.append({"config": "bystander/baseline", **_bystander_baseline()})
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run(), "live migration: downtime + bystander p99")

@@ -44,6 +44,8 @@ SUITES = [
      "LLM serving: decode throughput vs concurrency (Fig 10b shape)"),
     ("multislot_lanes", "bench_multislot",
      "Multi-slot executor lanes: two-tenant p50/p99 A/B + preemption"),
+    ("live_migrate", "bench_migrate",
+     "Live tenant migration: downtime vs KV footprint + bystander p99"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
@@ -56,6 +58,7 @@ JSON_ARTIFACTS = {
     "scheduler_qos": ("BENCH_scheduler.json", "bench_scheduler"),
     "kernel_microbench": ("BENCH_kernels.json", "bench_kernels"),
     "multislot_lanes": ("BENCH_multislot.json", "bench_multislot"),
+    "live_migrate": ("BENCH_migrate.json", "bench_migrate"),
 }
 
 

@@ -2,9 +2,11 @@
 """Bench-history store: artifact rows keyed by (commit, suite, config).
 
     python scripts/bench_history.py append BENCH_serving.json [...]
+                                          [--prune 50]
     python scripts/bench_history.py trend [--suite bench_serving]
                                           [--config b8_p16_pallas0]
-                                          [--last 10]
+                                          [--last 10] [--plot]
+    python scripts/bench_history.py prune [--keep 50]
 
 ``append`` reads machine-readable bench artifacts (the
 ``benchmarks.common.emit_json`` schema) and appends one JSONL row per
@@ -17,6 +19,11 @@ view that ``git show HEAD:<file>`` cannot give.
 ``scripts/diff_bench.py`` falls back to this file when an artifact has
 no committed baseline at HEAD (e.g. a brand-new suite whose artifact was
 benched but not yet committed, or a rebase that dropped it).
+
+``prune`` (or ``append --prune N``) bounds the store to the last N
+distinct commits (by first-seen timestamp) so the JSONL file never grows
+without bound; ``trend --plot`` renders each per-config series as an
+ASCII sparkline for an at-a-glance regression scan.
 """
 from __future__ import annotations
 
@@ -93,8 +100,38 @@ def _write_history(rows: Iterable[Dict], path: str) -> None:
     os.replace(tmp, path)
 
 
+def _commit_order(rows: List[Dict]) -> List[str]:
+    """Distinct commits, oldest first: first-seen timestamp (stable
+    across re-appends), falling back to file position for pre-ts rows —
+    the ONE commit ordering trend/prune/latest_rows agree on."""
+    order: Dict[str, tuple] = {}
+    for i, r in enumerate(rows):
+        if "commit" in r:
+            order.setdefault(r["commit"], (float(r.get("ts", 0.0)), i))
+    return sorted(order, key=order.get)
+
+
+def prune(keep: int = 50, *, path: str = HISTORY_PATH) -> int:
+    """Drop rows of all but the most recent ``keep`` distinct commits.
+    Bounds the store (~50 commits is years of PR cadence) while keeping
+    every config's full recent trend window intact."""
+    rows = load_history(path)
+    commits = _commit_order(rows)
+    if keep <= 0 or len(commits) <= keep:
+        print(f"[history] prune: {len(commits)} commit(s) <= keep={keep}, "
+              "nothing to do")
+        return 0
+    recent = set(commits[-keep:])
+    kept = [r for r in rows if r.get("commit") in recent]
+    _write_history(kept, path)
+    print(f"[history] pruned {len(rows) - len(kept)} row(s) from "
+          f"{len(commits) - keep} old commit(s); {len(kept)} rows / "
+          f"{keep} commits kept")
+    return 0
+
+
 def append(artifacts: List[str], *, commit: Optional[str] = None,
-           path: str = HISTORY_PATH) -> int:
+           path: str = HISTORY_PATH, prune_keep: int = 0) -> int:
     """Append every row of every artifact under ``commit`` (default:
     current HEAD), replacing rows with the same (commit, suite, config)."""
     commit = commit or git_head()
@@ -135,6 +172,8 @@ def append(artifacts: List[str], *, commit: Optional[str] = None,
     _write_history(kept + fresh, path)
     print(f"[history] {path}: +{len(fresh)} rows for {commit[:12]} "
           f"({len(kept)} kept)")
+    if prune_keep > 0:
+        prune(prune_keep, path=path)
     return 0
 
 
@@ -154,9 +193,28 @@ def latest_rows(suite: str, *, exclude_commit: Optional[str] = None,
     return [r for r in rows if r["commit"] == last]
 
 
+SPARK_BLOCKS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: List[float]) -> str:
+    """Map a series onto eight block heights (min -> ▁, max -> █); a flat
+    series renders mid-height so one char still means 'data here'."""
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    span = hi - lo
+    if span <= 0:
+        return SPARK_BLOCKS[3] * len(values)
+    return "".join(
+        SPARK_BLOCKS[min(int((v - lo) / span * 8), 7)] for v in values)
+
+
 def trend(*, suite: Optional[str] = None, config: Optional[str] = None,
-          last: int = 10, path: str = HISTORY_PATH) -> int:
-    """Per-(suite, config) metric series over the last N commits."""
+          last: int = 10, plot: bool = False,
+          path: str = HISTORY_PATH) -> int:
+    """Per-(suite, config) metric series over the last N commits;
+    ``plot=True`` adds an ASCII sparkline per series (oldest -> newest,
+    annotated with the metric's min/max and whether higher is better)."""
     rows = load_history(path)
     if suite:
         rows = [r for r in rows if r.get("suite") == suite]
@@ -165,12 +223,7 @@ def trend(*, suite: Optional[str] = None, config: Optional[str] = None,
     if not rows:
         print("[history] no matching rows")
         return 0
-    # commit order = first-seen timestamp (stable across re-appends),
-    # falling back to file position for pre-ts rows
-    order: Dict[str, tuple] = {}
-    for i, r in enumerate(rows):
-        order.setdefault(r["commit"], (float(r.get("ts", 0.0)), i))
-    commits = sorted(order, key=order.get)[-last:]
+    commits = _commit_order(rows)[-last:]
     series: Dict[tuple, Dict[str, Dict]] = {}
     for r in rows:
         if r["commit"] not in commits:
@@ -178,13 +231,34 @@ def trend(*, suite: Optional[str] = None, config: Optional[str] = None,
         series.setdefault((r["suite"], r["config"]), {})[r["commit"]] = r
     for (s, c), by_commit in sorted(series.items()):
         print(f"\n## {s} :: {c}")
+        points: List[tuple] = []        # (commit, name, value, sense)
         for commit in commits:
             r = by_commit.get(commit)
             if r is None:
                 continue
             m = metric_of(r)
+            if plot:
+                if m is not None:
+                    points.append((commit, *m))
+                continue
             val = f"{m[1]:.4g} {m[0]}" if m else "(no metric)"
             print(f"  {commit[:12]}  {val}")
+        if plot and not points:
+            print("  (no comparable metric)")
+            continue
+        if plot and points:
+            names = {p[1] for p in points}
+            if len(names) != 1:
+                print(f"  (metric changed across commits: "
+                      f"{sorted(names)}; no sparkline)")
+                continue
+            vals = [p[2] for p in points]
+            sense = "higher=better" if points[0][3] > 0 \
+                else "lower=better"
+            print(f"  {sparkline(vals)}  {points[0][1]} "
+                  f"[{min(vals):.4g} .. {max(vals):.4g}] {sense}  "
+                  f"({points[0][0][:8]} -> {points[-1][0][:8]}, "
+                  f"{len(vals)} commits)")
     return 0
 
 
@@ -195,19 +269,31 @@ def main(argv=None) -> int:
     ap_a.add_argument("artifacts", nargs="+")
     ap_a.add_argument("--commit", default=None,
                       help="override the commit key (default: HEAD)")
+    ap_a.add_argument("--prune", type=int, default=0, metavar="N",
+                      help="after appending, keep only the last N "
+                           "distinct commits (0 = no pruning)")
     ap_a.add_argument("--history", default=HISTORY_PATH)
     ap_t = sub.add_parser("trend", help="print per-config history")
     ap_t.add_argument("--suite", default=None)
     ap_t.add_argument("--config", default=None)
     ap_t.add_argument("--last", type=int, default=10,
                       help="how many commits back to show")
+    ap_t.add_argument("--plot", action="store_true",
+                      help="render each series as an ASCII sparkline")
     ap_t.add_argument("--history", default=HISTORY_PATH)
+    ap_p = sub.add_parser("prune",
+                          help="drop history beyond the last N commits")
+    ap_p.add_argument("--keep", type=int, default=50,
+                      help="distinct commits to keep (default 50)")
+    ap_p.add_argument("--history", default=HISTORY_PATH)
     args = ap.parse_args(argv)
     if args.cmd == "append":
         return append(args.artifacts, commit=args.commit,
-                      path=args.history)
+                      path=args.history, prune_keep=args.prune)
+    if args.cmd == "prune":
+        return prune(args.keep, path=args.history)
     return trend(suite=args.suite, config=args.config, last=args.last,
-                 path=args.history)
+                 plot=args.plot, path=args.history)
 
 
 if __name__ == "__main__":

@@ -20,11 +20,17 @@ else
   python -m pytest -x -q -m "not slow"
 fi
 
+# smoke the live-migration demo end to end (two shells, mid-decode move,
+# token-for-token continuity assert — examples/migrate_shell.py exits
+# non-zero on any lost/dup/diverged completion)
+python examples/migrate_shell.py
+
 # substring match: llm_serving runs both the sweep (-> BENCH_serving.json)
 # and llm_serving_scaling (Fig 10b concurrency curve); scheduler_qos,
-# kernel_microbench and multislot_lanes write their BENCH_*.json artifacts
+# kernel_microbench, multislot_lanes and live_migrate write their
+# BENCH_*.json artifacts
 python -m benchmarks.run \
-  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes
+  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate
 
 # Gated trend check: diff fresh artifacts against the previous PR's
 # committed versions (git show HEAD:..., falling back to
@@ -49,8 +55,14 @@ python scripts/diff_bench.py BENCH_kernels.json   --warn-pct 150 "${STRICT[@]}"
 # multislot: trend metric is the lanes-on p99 speedup (~100-600x); the
 # 90% floor only trips when lanes stop working (speedup collapses ~1x)
 python scripts/diff_bench.py BENCH_multislot.json --warn-pct 90 "${STRICT[@]}"
+# migrate: ms-scale downtime cells swing >2x on shared hosts (occasional
+# gather/scatter retrace when the footprint shape shifts) — the 200%
+# floor is an order-of-magnitude guard like the kernels suite
+python scripts/diff_bench.py BENCH_migrate.json   --warn-pct 200 "${STRICT[@]}"
 
 # record this run in the history store (keyed by commit+suite+config;
-# re-runs on the same commit replace, never duplicate)
+# re-runs on the same commit replace, never duplicate), keeping the
+# last ~50 commits of history
 python scripts/bench_history.py append BENCH_serving.json \
-  BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json
+  BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json \
+  BENCH_migrate.json --prune 50

@@ -45,16 +45,25 @@ class _EngineHolder:
 
     def engine(self, vfpga):
         slot = vfpga.slot
-        if slot not in self._engines:
+        eng = self._engines.get(slot)
+        if eng is None:
             from repro.serve.engine import ServingEngine
             mmu = vfpga.shell.services.get("mmu")
             if mmu is None:
                 raise RuntimeError("lm_serving requires the mmu service")
-            self._engines[slot] = ServingEngine(
+            eng = self._engines[slot] = ServingEngine(
                 self.cfg, self.params, mmu, max_batch=self.max_batch,
                 max_len=self.max_len, shell=vfpga.shell, slot=slot,
                 tenant=vfpga.tenant)
-        return self._engines[slot]
+        elif vfpga.shell.engines.get(slot) is not eng:
+            # the slot was hot-swapped away and back: rebind the cached
+            # engine (unload() released its registrations).  Guarded so
+            # steady-state requests skip the registry write and the
+            # pager re-registration (this runs per invocation).
+            vfpga.shell.engines[slot] = eng
+            eng.mmu.register_pager(eng._pager_gather, eng._pager_scatter,
+                                   owner=eng)
+        return eng
 
     def __call__(self, iface, vfpga, prompt) -> List[int]:
         eng = self.engine(vfpga)

@@ -6,6 +6,7 @@ sharing, run-time reconfiguration, and a unified multi-stream interface.
 """
 from repro.core.cthread import Alloc, CThread
 from repro.core.interfaces import (AppInterface, Completion, Oper, SgEntry)
+from repro.core.migrate import (MigrationError, MigrationReport, migrate)
 from repro.core.port import (Invocation, Port, PortCapabilities, PortFuture,
                              PortState, ServicePort, VFpgaPort)
 from repro.core.scheduler import ShellScheduler, Tenant
@@ -19,4 +20,5 @@ __all__ = [
     "ServicePort", "VFpgaPort",
     "BuildReport", "Shell", "ShellConfig", "ShellScheduler", "StaticLayer",
     "Tenant", "TransferEngine", "AppArtifact", "VFpga",
+    "MigrationError", "MigrationReport", "migrate",
 ]

@@ -27,7 +27,9 @@ import numpy as np
 
 MAGIC = b"CYBS"
 FORMAT_VERSION = 1
-KNOWN_KINDS = ("shell", "app", "raw")
+# "migration" blobs carry a quiesced tenant's state (page tables, live KV
+# payload, CSR/addr-map) for quiesce-and-migrate — see repro.core.migrate
+KNOWN_KINDS = ("shell", "app", "raw", "migration")
 
 _HDR = struct.Struct("<HI")         # (format_version, header_len)
 

@@ -1,0 +1,299 @@
+"""Quiesce-and-migrate: live tenant relocation across shells.
+
+Coyote v2's reconfiguration story is that services and user logic move
+while the system keeps serving.  ``Shell.reconfigure`` already hot-swaps
+ONE slot in place (drain -> snapshot -> load -> restore -> replay); this
+module completes the story by moving a *paged serving tenant* between two
+shells — the checkpoint-based relocation primitive of SYNERGY/RC3E built
+on the same Port drain machinery:
+
+  1. **Quiesce** — the source slot's port stops intake (new submissions
+     are *held*, never rejected), the in-flight tail completes, and the
+     tenant's billed link traffic drains (``scheduler.drain_tenant`` —
+     tenant-aware: bystander tenants keep flowing untouched).
+  2. **Snapshot** — a versioned, pickle-free state container in the safe
+     bitstream format (``kind="migration"``): CSR file + cThread address
+     map, the MMU page-table snapshot, in-flight/queued requests, the
+     PRNG stream, and *the actual KV pool pages* — a device-side compact
+     gather of the tenant's live pages into a transfer buffer
+     (``repro.serve.paged_model.gather_kv_pages``), plus any payloads the
+     evict-with-copy pager already holds on the host.
+  3. **Restore** — fresh page allocation on the destination MMU
+     (``MMU.restore_seqs``), KV payload scattered to the new physical
+     pages, ``DeviceBlockTable`` rows rebuilt (dirty-row upload on the
+     next device view), decode state and PRNG adopted, CSR/addr-map
+     applied to the destination slot.
+  4. **Replay** — invocations held at the source during the move are
+     re-ticketed and dispatched on the DESTINATION port, resolving their
+     original futures: zero lost, zero duplicated completions across the
+     migration boundary.
+
+Every ``migrate()`` round-trips the snapshot through the container
+encode/decode, so what lands on the destination is exactly what a
+wire/disk copy would carry — and the version check runs on every move.
+
+    from repro.core.migrate import migrate
+    report = migrate(src_shell, dst_shell, "gold")      # tenant or slot
+    print(report.downtime_s, report.payload_bytes)
+
+Demo: ``PYTHONPATH=src python examples/migrate_shell.py``; bench:
+``PYTHONPATH=src python -m benchmarks.run --only live_migrate``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import bitstream as B
+from repro.core.bitstream import BitstreamError
+
+# Bumped whenever the migration header/array layout changes; a snapshot
+# from a different version is refused (BitstreamError), never guessed at.
+MIGRATION_STATE_VERSION = 1
+
+
+class MigrationError(RuntimeError):
+    """Migration pipeline failure (the source is left serving)."""
+
+
+@dataclass
+class MigrationReport:
+    """What one ``migrate()`` did and what it cost.
+
+    ``downtime_s`` is the tenant-observed service gap: first intake hold
+    at the source to held-invocation replay completing on the
+    destination.  Bystander tenants see none of it."""
+    tenant: Optional[str]
+    src_slot: int
+    dst_slot: int
+    n_requests: int          # in-flight requests moved
+    n_queued: int            # queued requests moved
+    n_pages: int             # KV pages copied (device + host-preserved)
+    payload_bytes: int       # encoded snapshot container size
+    replayed: int            # held invocations replayed on the dst port
+    quiesce_s: float
+    snapshot_s: float
+    restore_s: float
+    replay_s: float
+    downtime_s: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+# ------------------------------------------------------ state container ----
+def encode_snapshot(header: Dict[str, Any], arrays: Any) -> bytes:
+    """Pack a tenant snapshot into the safe versioned bitstream container
+    (``CYBS`` magic, ``kind="migration"``, npz payload, no pickle)."""
+    hdr = {"state_version": MIGRATION_STATE_VERSION, **header}
+    return B.encode("migration", hdr, arrays=arrays)
+
+
+def decode_snapshot(blob: bytes) -> Tuple[Dict[str, Any], Any]:
+    """Unpack + validate a migration snapshot.  Bad magic, unknown kind,
+    container-version or state-version mismatch all raise
+    :class:`BitstreamError` — a snapshot is never half-applied."""
+    _, header, arrays = B.decode(blob, expect_kind="migration")
+    ver = header.get("state_version")
+    if ver != MIGRATION_STATE_VERSION:
+        raise BitstreamError(
+            f"migration state version {ver!r} does not match this "
+            f"runtime ({MIGRATION_STATE_VERSION}); refusing to restore")
+    return header, arrays or {}
+
+
+def save_snapshot(path: str, header: Dict[str, Any], arrays: Any) -> int:
+    blob = encode_snapshot(header, arrays)
+    Path(path).write_bytes(blob)
+    return len(blob)
+
+
+def load_snapshot(path: str) -> Tuple[Dict[str, Any], Any]:
+    return decode_snapshot(Path(path).read_bytes())
+
+
+# ------------------------------------------------------- snapshot side -----
+def snapshot_tenant(shell, slot: int) -> Tuple[Dict[str, Any], Any]:
+    """Snapshot the (already quiesced) serving tenant on ``slot``:
+    engine paged state + slot port state (CSR file, cThread address map).
+    Returns the ``(header, arrays)`` pair :func:`encode_snapshot` packs."""
+    engine = shell.engines.get(slot)
+    if engine is None:
+        raise MigrationError(
+            f"no serving engine bound to slot {slot} on this shell "
+            "(migratable tenants are paged ServingEngines created with "
+            "shell=...)")
+    header, arrays = engine.snapshot_state()
+    port = shell.attach(slot)
+    psnap = port.snapshot()
+    header["tenant"] = shell.vfpgas[slot].tenant
+    header["port"] = {
+        "csr": {str(reg): int(val)
+                for reg, val in psnap.get("csr", {}).items()},
+        "next_vaddr": int(psnap.get("next_vaddr", 0)),
+        "app": psnap.get("app"),
+    }
+    addr_map = psnap.get("addr_map") or {}
+    if addr_map:
+        arrays["addr_map"] = {str(v): np.asarray(buf)
+                              for v, buf in addr_map.items()}
+    return header, arrays
+
+
+def _restore_port_state(shell, slot: int, header: Dict[str, Any],
+                        arrays: Any) -> None:
+    """Apply the snapshotted CSR file and cThread address map to the
+    destination slot (getMem buffers outlive the logic they feed)."""
+    vf = shell.vfpgas[slot]
+    pstate = header.get("port", {})
+    for reg, val in pstate.get("csr", {}).items():
+        vf.iface.csr.set_csr(int(val), int(reg))
+    for vaddr, buf in (arrays.get("addr_map") or {}).items():
+        vf._addr_map[int(vaddr)] = np.asarray(buf)
+    nv = int(pstate.get("next_vaddr", 0))
+    vf._next_vaddr = max(vf._next_vaddr, nv)
+
+
+# ------------------------------------------------------------ pipeline -----
+def _resolve_slot(shell, target: Union[int, str]) -> int:
+    if isinstance(target, int):
+        return target
+    for slot, eng in shell.engines.items():
+        if eng.tenant == target:
+            return slot
+    for vf in shell.vfpgas:
+        if vf.tenant == target and vf.slot in shell.engines:
+            return vf.slot
+    tenants = sorted({e.tenant for e in shell.engines.values()
+                      if e.tenant is not None})
+    raise MigrationError(
+        f"no migratable tenant {target!r} on this shell "
+        f"(tenants: {tenants})")
+
+
+def migrate(src_shell, dst_shell, target: Union[int, str], *,
+            dst_slot: Optional[int] = None,
+            drain_timeout: float = 30.0) -> MigrationReport:
+    """Move a live paged serving tenant from ``src_shell`` to
+    ``dst_shell`` with zero lost and zero duplicated completions.
+
+    ``target`` is a vFPGA slot index or a tenant name on the source
+    shell; ``dst_slot`` defaults to the same index.  The destination
+    slot must already host a :class:`~repro.serve.engine.ServingEngine`
+    with matching geometry (same model shape, page size, KV layout) and
+    identical weights — migration moves *state*, the logic is loaded by
+    the normal app-bitstream path.  On any failure the source port
+    resumes and the tenant keeps serving where it was.
+
+    Call between engine steps (a decode step is the atomic unit, exactly
+    like the executor lanes' checkpoint boundaries): the port quiesce
+    holds *port* traffic, and the snapshot assumes no ``step()`` is
+    concurrently mutating the donated pools.
+    """
+    slot = _resolve_slot(src_shell, target)
+    engine = src_shell.engines.get(slot)
+    if engine is None:
+        raise MigrationError(
+            f"no serving engine bound to source slot {slot}")
+    dslot = slot if dst_slot is None else dst_slot
+    dst_engine = dst_shell.engines.get(dslot)
+    if dst_engine is None:
+        raise MigrationError(
+            f"no serving engine bound to destination slot {dslot} — "
+            "load the app and create its engine before migrating onto it")
+    if dst_engine.geometry() != engine.geometry():
+        raise MigrationError(
+            f"geometry mismatch: source {engine.geometry()} vs "
+            f"destination {dst_engine.geometry()}")
+    tenant = engine.tenant or src_shell.vfpgas[slot].tenant
+    src_port = src_shell.attach(slot)
+
+    t0 = time.perf_counter()
+    # -- 1. quiesce ---------------------------------------------------------
+    # every drain result is checked: a snapshot taken while tenant work
+    # is still in flight would be torn (CSR/addr-map mutating under it)
+    if not src_port.quiesce(timeout=drain_timeout):
+        src_port.resume()
+        raise MigrationError(
+            f"slot {slot} failed to quiesce within {drain_timeout}s "
+            f"({src_port.inflight()} invocations in flight); migration "
+            "aborted, intake resumed")
+    if tenant is not None and not src_shell.scheduler.drain_tenant(
+            tenant, timeout=drain_timeout):
+        src_port.resume()
+        raise MigrationError(
+            f"tenant {tenant!r} still has link traffic in flight after "
+            f"{drain_timeout}s; migration aborted, intake resumed")
+    if not engine.flush_io(timeout=drain_timeout):
+        src_port.resume()
+        raise MigrationError(
+            f"engine decode-IO futures did not drain within "
+            f"{drain_timeout}s; migration aborted, intake resumed")
+    t_q = time.perf_counter()
+
+    # -- 2. snapshot (device KV gather + container round-trip) --------------
+    try:
+        header, arrays = snapshot_tenant(src_shell, slot)
+        blob = encode_snapshot(header, arrays)
+    except BaseException:
+        src_port.resume()
+        raise
+    t_s = time.perf_counter()
+
+    # -- 3. restore on the destination --------------------------------------
+    # the destination slot's QoS binding moves only now, after the source
+    # snapshot is in hand — an aborted quiesce never touches the dst
+    prev_tenant = dst_shell.vfpgas[dslot].tenant
+    dst_port = dst_shell.attach(dslot, tenant=tenant)
+    try:
+        rheader, rarrays = decode_snapshot(blob)
+        stats = dst_engine.restore_state(rheader, rarrays)
+        _restore_port_state(dst_shell, dslot, rheader, rarrays)
+    except Exception as e:  # noqa: BLE001 — ANY restore failure (bad
+        # container, geometry/capacity refusal, id collision) must leave
+        # the source serving; nothing was freed there yet
+        if prev_tenant is not None and prev_tenant != tenant:
+            dst_shell.attach(dslot, tenant=prev_tenant)   # rebind back
+        src_port.resume()
+        raise MigrationError(f"restore failed on destination: {e}") from e
+    t_r = time.perf_counter()
+
+    # -- 4. evacuate the source, replay held work on the destination --------
+    engine.evacuate()
+    pending = list(src_port.take_held())
+    replayed = 0
+    try:
+        # one at a time, so a mid-list failure knows EXACTLY which
+        # invocations the destination consumed (dispatched or joined its
+        # held FIFO) and which it never touched
+        while pending:
+            replayed += dst_port.replay_adopted(pending[:1])
+            pending.pop(0)
+    except Exception as e:  # noqa: BLE001 — e.g. the destination port
+        # was closed by a racing cold_restart.  The tenant's state HAS
+        # moved, but no held future may be dropped OR duplicated: only
+        # the invocations the destination never touched re-hold at the
+        # source (re-ticketed) and replay there on resume — exactly
+        # once either way, nothing wedged QUIESCED.
+        src_port.restore_held(pending)
+        src_port.resume()
+        raise MigrationError(
+            f"replay on destination port failed after restore: {e}; "
+            f"{len(pending)} untouched invocation(s) replayed at the "
+            "source, which no longer holds the tenant's paged state"
+        ) from e
+    src_port.resume()                     # slot reusable, nothing held
+    t_done = time.perf_counter()
+
+    return MigrationReport(
+        tenant=tenant, src_slot=slot, dst_slot=dslot,
+        n_requests=stats["requests"], n_queued=stats["queued"],
+        n_pages=stats["pages"], payload_bytes=len(blob),
+        replayed=replayed,
+        quiesce_s=t_q - t0, snapshot_s=t_s - t_q,
+        restore_s=t_r - t_s, replay_s=t_done - t_r,
+        downtime_s=t_done - t0)

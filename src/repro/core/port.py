@@ -300,6 +300,63 @@ class Port:
                 replayed += 1
                 self._dispatch(inv, fut)
 
+    def take_held(self) -> List[Tuple[Invocation, PortFuture]]:
+        """Detach the held FIFO for replay on ANOTHER port — the
+        cross-shell half of hold-and-replay (quiesce-and-migrate).  The
+        port must be quiesced/draining; callers hand the list to the
+        destination port's :meth:`replay_adopted` so every held
+        submission still resolves its ORIGINAL future exactly once."""
+        with self._lock:
+            if self._state is PortState.ACTIVE:
+                raise PortError(
+                    f"take_held on ACTIVE port {self.name!r}: quiesce "
+                    "first (held invocations only exist while intake is "
+                    "stopped)")
+            held, self._held = self._held, []
+            return held
+
+    def restore_held(self, held: List[Tuple[Invocation, PortFuture]]
+                     ) -> None:
+        """Re-attach invocations detached by :meth:`take_held` (a failed
+        migration hands them back): they rejoin the FRONT of the held
+        FIFO in their original order, re-ticketed in this port's space
+        (a destination may have re-ticketed them before failing), and
+        replay on the next ``resume()`` — still exactly once."""
+        with self._lock:
+            for inv, _fut in held:
+                inv.ticket = next(self._tickets)
+            self._held = list(held) + self._held
+            self.held_peak = max(self.held_peak, len(self._held))
+
+    def replay_adopted(self,
+                       held: List[Tuple[Invocation, PortFuture]]) -> int:
+        """Dispatch invocations quiesced on another port through THIS
+        port, resolving their original futures — zero lost, zero
+        duplicated completions across the migration boundary.  Each
+        invocation is re-ticketed in this port's space (tickets are
+        per-port); if this port is itself not ACTIVE the work joins its
+        held FIFO and replays on its next ``resume()``."""
+        n = 0
+        for inv, fut in held:
+            with self._lock:
+                if self._closed:
+                    raise PortError(
+                        f"port {self.name!r} is closed; cannot adopt "
+                        "migrated invocations")
+                inv.ticket = next(self._tickets)
+                self.submitted += 1
+                if self._state is not PortState.ACTIVE:
+                    # joins this port's held FIFO; its later resume()
+                    # replays it (and counts it) exactly once
+                    self._held.append((inv, fut))
+                    self.held_peak = max(self.held_peak, len(self._held))
+                    continue
+                self._inflight[inv.ticket] = fut
+                self.replayed += 1
+            self._dispatch(inv, fut)
+            n += 1
+        return n
+
     # ------------------------------------------------------------ hooks ----
     def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
         raise NotImplementedError

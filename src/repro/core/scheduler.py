@@ -555,6 +555,34 @@ class ShellScheduler:
             self._paused = False
             self._work_cv.notify_all()
 
+    def drain_tenant(self, name: str, timeout: Optional[float] = None
+                     ) -> bool:
+        """Tenant-aware drain: block until the NAMED tenant's accepted
+        submissions have all completed, while every other tenant keeps
+        flowing (nothing is paused and no other queue is touched).
+
+        This is the drain-ordering primitive quiesce-and-migrate builds
+        on: the migrating tenant's in-flight tail is waited out first,
+        bystander tenants on the same shell never see a stall.  Returns
+        True once the tenant is idle (an unknown tenant is trivially
+        idle), False on timeout.
+        """
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        with self._lock:
+            t = self._tenants.get(name)
+            if t is None:
+                return True
+            self._ensure_worker_locked()
+            self._work_cv.notify_all()
+            while t.pending > 0:
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._idle_cv.wait(timeout=remaining if remaining else 0.25)
+            return True
+
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every accepted submission has completed."""
         deadline = (None if timeout is None

@@ -127,7 +127,7 @@ class MMU(Service):
     NAME = "mmu"
     PORT_METHODS = ("alloc_seq", "extend_seq", "free_seq", "translate",
                     "block_table", "seq_lens", "utilization", "status",
-                    "configure")
+                    "configure", "snapshot_seqs")
     PORT_MEM_MODEL = "paged"
 
     def __init__(self, config: MMUConfig = MMUConfig(),
@@ -135,6 +135,12 @@ class MMU(Service):
         super().__init__(config)
         self._lock = threading.RLock()
         self._post = interrupt_post or (lambda slot, val: None)
+        # evict-with-copy pager (registered by the page-data owner, e.g.
+        # the serving engine): survives reconfigure — it belongs to the
+        # owner's lifetime, not the pool's
+        self._pager_gather: Optional[Callable[[int], Any]] = None
+        self._pager_scatter: Optional[Callable[[int, Any], None]] = None
+        self._pager_owner: Any = None
         self._init_pools()
 
     def _init_pools(self) -> None:
@@ -147,6 +153,9 @@ class MMU(Service):
         # list changes (alloc/extend/evict/migrate), so cached device
         # block-table views re-upload only the rows that actually moved.
         self._map_version: Dict[int, int] = {}
+        # host-resident page payloads, keyed by host slot: filled by the
+        # pager's gather on evict, drained by scatter on fault-back-in
+        self._host_data: Dict[int, Any] = {}
         self.page_faults = 0
         self.migrations_out = 0
         self.migrations_in = 0
@@ -214,6 +223,63 @@ class MMU(Service):
                 best, best_len = sid, resident
         return best
 
+    # -- evict-with-copy pager ------------------------------------------------
+    def register_pager(self, gather: Callable[[int], Any],
+                       scatter: Callable[[int, Any], None],
+                       owner: Any = None) -> None:
+        """Register the page-data mover for REAL KV migration on evict.
+
+        ``gather(ppage)`` returns the page's payload (e.g. the serving
+        engine's (n_layers, page_size, K, hd) KV slab for that physical
+        page) *before* the device page is freed; ``scatter(ppage, data)``
+        writes a preserved payload into a freshly allocated device page
+        on fault-back-in.  Without a pager, eviction falls back to the
+        old mapping-only behaviour (page contents are lost and the row
+        decodes degraded until re-prefilled).
+
+        ONE pager per MMU — and this is enforced: the pager closes over
+        the single paged-pool owner, so a second distinct ``owner``
+        (e.g. a second ServingEngine sharing this MMU) is refused rather
+        than silently gathering/scattering through the wrong pools and
+        corrupting both tenants' KV.  Give each paged engine its own MMU
+        instance, or :meth:`unregister_pager` the old owner first.
+        """
+        with self._lock:
+            if (self._pager_owner is not None and owner is not None
+                    and owner is not self._pager_owner):
+                raise RuntimeError(
+                    "this MMU already has an evict-with-copy pager "
+                    f"(owner {self._pager_owner!r}); a second paged-pool "
+                    "owner on one MMU would corrupt both pools on "
+                    "evict — give each engine its own MMU, or "
+                    "unregister_pager() the old owner first")
+            self._pager_gather = gather
+            self._pager_scatter = scatter
+            self._pager_owner = owner
+
+    def unregister_pager(self, owner: Any = None) -> None:
+        """Drop the pager (the owner is being torn down/replaced).
+        Already-preserved host payloads stay restorable only as raw
+        data; future evictions fall back to mapping-only."""
+        with self._lock:
+            if owner is not None and owner is not self._pager_owner:
+                return                       # not yours to drop
+            self._pager_gather = None
+            self._pager_scatter = None
+            self._pager_owner = None
+
+    def host_page_data(self, seq_id: int, vpage: int) -> Optional[Any]:
+        """The preserved payload of a host-resident page (None when the
+        page is device-resident or was evicted without a pager)."""
+        with self._lock:
+            se = self._seqs.get(seq_id)
+            if se is None or vpage >= len(se.pages):
+                return None
+            pte = se.pages[vpage]
+            if not pte.on_host:
+                return None
+            return self._host_data.get(pte.host_slot)
+
     def _evict_seq_page(self, seq_id: int) -> None:
         se = self._seqs[seq_id]
         for pte in reversed(se.pages):                   # evict tail first
@@ -222,6 +288,11 @@ class MMU(Service):
                     raise PageFaultError("host pool exhausted")
                 pte.on_host = True
                 pte.host_slot = self._host_free.pop()
+                if self._pager_gather is not None:
+                    # REAL migration: copy the page payload to the host
+                    # store before the device page is recycled
+                    self._host_data[pte.host_slot] = \
+                        self._pager_gather(pte.ppage)
                 self._free.append(pte.ppage)
                 pte.ppage = -1
                 self.migrations_out += 1
@@ -236,6 +307,7 @@ class MMU(Service):
             for pte in se.pages:
                 if pte.on_host:
                     self._host_free.append(pte.host_slot)
+                    self._host_data.pop(pte.host_slot, None)
                 else:
                     self._free.append(pte.ppage)
             n = self.tlb.invalidate(seq_id)
@@ -261,6 +333,10 @@ class MMU(Service):
                 self.page_faults += 1
                 self._post(slot, seq_id)
                 pte.ppage = self._take_device_page(seq_id, slot)
+                data = self._host_data.pop(pte.host_slot, None)
+                if data is not None and self._pager_scatter is not None:
+                    # restore the preserved payload into the fresh page
+                    self._pager_scatter(pte.ppage, data)
                 self._host_free.append(pte.host_slot)
                 pte.on_host = False
                 pte.host_slot = -1
@@ -308,6 +384,83 @@ class MMU(Service):
     def channel_of(self, ppage: int) -> int:
         """Striping: which channel (HBM bank) a page lives on."""
         return ppage % self.config.n_channels
+
+    # -- migration snapshot / restore (quiesce-and-migrate) ---------------------
+    def snapshot_seqs(self, seq_ids: List[int]) -> Dict[str, Any]:
+        """JSON-safe page-table snapshot of a tenant's sequences — the
+        MMU half of a migration state container.  Captures lengths and
+        per-page mapping state (vpage order, device ppage, host
+        residency); page *payloads* are gathered separately by the pool
+        owner (``repro.serve.paged_model.gather_kv_pages``)."""
+        with self._lock:
+            seqs = []
+            for sid in seq_ids:
+                se = self._seqs[sid]
+                seqs.append({
+                    "seq_id": int(sid), "length": int(se.length),
+                    "pages": [{"vpage": int(p.vpage),
+                               "ppage": int(p.ppage),
+                               "on_host": bool(p.on_host)}
+                              for p in se.pages]})
+            return {"page_size": int(self.config.page_size), "seqs": seqs}
+
+    def restore_seqs(self, snap: Dict[str, Any], *, slot: int = 0
+                     ) -> Dict[int, List[Dict[str, int]]]:
+        """Rebuild snapshotted sequences on THIS MMU with fresh device
+        pages (every page comes back device-resident, including pages
+        that were host-evicted at the source).
+
+        Returns ``{seq_id: [{"vpage", "old_ppage", "new_ppage",
+        "was_host"}, ...]}`` — the page map the caller uses to scatter
+        the migrated KV payload into the destination pools
+        (``old_ppage`` is -1 for pages that were host-resident).
+        Page-size geometry must match; colliding sequence ids are
+        refused (migrating tenants must use disjoint id ranges,
+        ``ServingEngine(rid_base=...)``).
+        """
+        if int(snap.get("page_size", -1)) != self.config.page_size:
+            raise PageFaultError(
+                f"page-size mismatch: snapshot has "
+                f"{snap.get('page_size')}, this MMU has "
+                f"{self.config.page_size} — cannot restore page tables "
+                "across page geometries")
+        mapping: Dict[int, List[Dict[str, int]]] = {}
+        with self._lock:
+            for sd in snap["seqs"]:
+                sid = int(sd["seq_id"])
+                if sid in self._seqs:
+                    raise KeyError(
+                        f"seq {sid} already allocated on the destination "
+                        "MMU (sequence id collision — use disjoint "
+                        "rid_base ranges per tenant)")
+            # demand upfront capacity: restoring THROUGH the eviction
+            # path could evict pages allocated earlier in this very
+            # restore (the returned mapping would dangle) — an incoming
+            # tenant must fit, it never steals resident tenants' pages
+            need = sum(len(sd["pages"]) for sd in snap["seqs"])
+            if need > len(self._free):
+                raise PageFaultError(
+                    f"destination pool has {len(self._free)} free pages "
+                    f"for a {need}-page incoming tenant; migration "
+                    "needs upfront capacity (free sequences or use a "
+                    "larger pool)")
+            for sd in snap["seqs"]:
+                sid = int(sd["seq_id"])
+                se = SeqEntry(seq_id=sid, length=int(sd["length"]))
+                pages = []
+                for p in sorted(sd["pages"], key=lambda x: x["vpage"]):
+                    new_pp = self._take_device_page(sid, slot)
+                    se.pages.append(PageTableEntry(vpage=int(p["vpage"]),
+                                                   ppage=new_pp))
+                    pages.append({"vpage": int(p["vpage"]),
+                                  "old_ppage": int(p["ppage"]),
+                                  "new_ppage": new_pp,
+                                  "was_host": bool(p["on_host"])})
+                self._seqs[sid] = se
+                self._map_version[sid] = 0
+                self._bump_map(sid)
+                mapping[sid] = pages
+        return mapping
 
     # -- introspection -----------------------------------------------------------
     def utilization(self) -> Dict[str, Any]:

@@ -99,6 +99,10 @@ class Shell:
                                         stream_depth=config.stream_depth,
                                         lanes=config.executor_lanes)
         self.ports: Dict[str, Port] = {}     # unified port registry (v2)
+        # slot -> serving engine bound to that slot (ServingEngine
+        # registers itself): how repro.core.migrate finds the paged
+        # state behind a slot
+        self.engines: Dict[int, Any] = {}
         self.built = False
 
     # ==================================================== build ("synthesis")
@@ -306,6 +310,7 @@ class Shell:
         for p in self.ports.values():
             p.close()
         self.ports.clear()
+        self.engines.clear()                 # engines wrap torn-down slots
         self.build(flow="shell")
         for slot, art in apps:
             self.vfpgas[slot].load(art, self.services, self.mesh)

@@ -179,6 +179,14 @@ class VFpga:
                 "compile_s": t_comp, "compile_cache_hit": float(hit)}
 
     def unload(self) -> None:
+        # a serving engine bound to this slot dies with the logic: drop
+        # it from the shell registry and release its MMU pager so the
+        # replacement app can register its own pool owner
+        shell = getattr(self, "shell", None)
+        if shell is not None:
+            eng = shell.engines.pop(self.slot, None)
+            if eng is not None:
+                eng.mmu.unregister_pager(eng)
         self.app = None
         self.compiled = None
         self.device_weights = None

@@ -47,11 +47,10 @@ the tier-1 smoke path plus the quick bench.
 """
 from __future__ import annotations
 
-import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,8 +58,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.services.mmu import MMU, MMUConfig
-from repro.serve.paged_model import (decode_step_paged, make_pools,
-                                     prefill_paged)
+from repro.serve.paged_model import (decode_step_paged, flat_page_indices,
+                                     gather_kv_pages, make_pools,
+                                     prefill_paged, scatter_kv_pages)
 
 
 @dataclass
@@ -93,7 +93,8 @@ class ServingEngine:
                  max_batch: int = 8, max_len: int = 1024,
                  use_pallas: bool = False,
                  pages_per_block: Optional[int] = None, seed: int = 0,
-                 shell=None, slot: int = 0, tenant: Optional[str] = None):
+                 shell=None, slot: int = 0, tenant: Optional[str] = None,
+                 rid_base: int = 0):
         assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
             "paged engine serves attention archs (DESIGN.md §5)"
         self.cfg = cfg
@@ -109,7 +110,12 @@ class ServingEngine:
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self._rng = np.random.RandomState(seed)     # host sampling oracle
-        self._rid = itertools.count(1)
+        # request/sequence ids: ``rid_base`` namespaces the id range so
+        # a migration destination adopting foreign rids (or shells whose
+        # engines use per-tenant MMU instances) never collides in the
+        # page tables.  NOTE: two paged engines must NOT share one MMU
+        # instance — register_pager(owner=...) enforces it.
+        self._rid_next = rid_base + 1
         self.completed: List[Request] = []
         self.steps = 0
         self.tokens_out = 0
@@ -134,12 +140,41 @@ class ServingEngine:
         self._io_futs: List = []
         self.port = (shell.attach(slot, tenant=tenant)
                      if shell is not None else None)
+        if shell is not None:
+            shell.engines[slot] = self     # migrate() resolves us by slot
+        # evict-with-copy: the MMU pager gathers a page's KV payload off
+        # the device before recycling the page and scatters it back on
+        # fault-in.  owner=self makes the one-pool-owner-per-MMU rule
+        # explicit: a second engine on this MMU is refused at
+        # construction, not discovered as silent KV corruption on evict.
+        mmu.register_pager(self._pager_gather, self._pager_scatter,
+                           owner=self)
+
+    # ------------------------------------------------- evict-with-copy -----
+    def _pager_gather(self, ppage: int) -> Dict[str, np.ndarray]:
+        """Copy one physical page's KV (all layers) to host — called by
+        the MMU just before it recycles the device page."""
+        flat = flat_page_indices([ppage], self.cfg.n_layers,
+                                 self.mmu.config.n_pages)
+        kv = gather_kv_pages(self.pools, flat)
+        return {"k": np.asarray(kv["k"]), "v": np.asarray(kv["v"])}
+
+    def _pager_scatter(self, ppage: int,
+                       data: Dict[str, np.ndarray]) -> None:
+        """Write a preserved page payload into a freshly mapped device
+        page (MMU fault-back-in path)."""
+        flat = flat_page_indices([ppage], self.cfg.n_layers,
+                                 self.mmu.config.n_pages)
+        self.pools = scatter_kv_pages(
+            self.pools, flat, {"k": jnp.asarray(data["k"]),
+                               "v": jnp.asarray(data["v"])})
 
     # -------------------------------------------------------------- API ----
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
                temperature: float = 0.0, top_k: int = 0,
                top_p: float = 1.0, tid: int = 0) -> int:
-        rid = next(self._rid)
+        rid = self._rid_next
+        self._rid_next += 1
         self.queue.append(Request(
             rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
             temperature=temperature, top_k=top_k, top_p=top_p, tid=tid,
@@ -361,6 +396,169 @@ class ServingEngine:
                 remaining.append(fut)
         self._io_futs = [f for f in remaining if not f.done()]
         return not self._io_futs
+
+    # ------------------------------------------- migration state (v2) ------
+    @staticmethod
+    def _req_to_dict(req: Request) -> Dict:
+        return {"rid": req.rid, "prompt": list(req.prompt),
+                "max_new_tokens": req.max_new_tokens,
+                "temperature": float(req.temperature),
+                "top_k": int(req.top_k), "top_p": float(req.top_p),
+                "tid": req.tid, "out_tokens": list(req.out_tokens),
+                "t_submit": float(req.t_submit),
+                "t_first_token": float(req.t_first_token)}
+
+    @staticmethod
+    def _req_from_dict(d: Dict) -> Request:
+        return Request(rid=int(d["rid"]), prompt=list(d["prompt"]),
+                       max_new_tokens=int(d["max_new_tokens"]),
+                       temperature=float(d["temperature"]),
+                       top_k=int(d["top_k"]), top_p=float(d["top_p"]),
+                       tid=int(d["tid"]),
+                       out_tokens=list(d["out_tokens"]),
+                       t_submit=float(d["t_submit"]),
+                       t_first_token=float(d["t_first_token"]))
+
+    def geometry(self) -> Dict[str, int]:
+        """The shape contract a migration peer must match byte-for-byte:
+        page geometry and the KV head layout of the pools."""
+        return {"page_size": self.page,
+                "n_layers": self.cfg.n_layers,
+                "n_kv_heads": self.cfg.n_kv_heads,
+                "head_dim": self.cfg.resolved_head_dim,
+                "vocab_size": self.cfg.vocab_size}
+
+    def snapshot_state(self) -> Tuple[Dict, Dict]:
+        """Freeze this engine's paged tenant state for migration.
+
+        Returns ``(header, arrays)``: a JSON-safe header (in-flight and
+        queued requests, the MMU page-table snapshot, the gather order of
+        the live pages, geometry) and an array pytree (the PRNG key, the
+        device-side compact KV gather of every live page, preserved
+        host-evicted page payloads).  The engine must be quiesced: no
+        concurrent ``step()``.  Nothing here is pickled — the pair feeds
+        ``repro.core.bitstream.encode("migration", ...)`` directly.
+        """
+        reqs = [{"slot": i, **self._req_to_dict(r)}
+                for i, r in enumerate(self.slots) if r is not None]
+        seq_ids = [r["rid"] for r in reqs]
+        mmu_snap = self.mmu.snapshot_seqs(seq_ids)
+        pages, host_pages = [], {}
+        for sd in mmu_snap["seqs"]:
+            for p in sd["pages"]:
+                if p["on_host"]:
+                    data = self.mmu.host_page_data(sd["seq_id"],
+                                                   p["vpage"])
+                    if data is not None:
+                        host_pages[f"{sd['seq_id']}:{p['vpage']}"] = {
+                            "k": np.asarray(data["k"]),
+                            "v": np.asarray(data["v"])}
+                else:
+                    pages.append({"seq_id": sd["seq_id"],
+                                  "vpage": p["vpage"],
+                                  "ppage": p["ppage"]})
+        header = {
+            "geometry": self.geometry(),
+            "requests": reqs,
+            "queue": [self._req_to_dict(r) for r in self.queue],
+            "mmu": mmu_snap,
+            "pages": pages,          # gather order of kv_k/kv_v rows
+        }
+        arrays: Dict = {"rng": np.asarray(self.rng)}
+        if pages:
+            flat = flat_page_indices([p["ppage"] for p in pages],
+                                     self.cfg.n_layers,
+                                     self.mmu.config.n_pages)
+            kv = gather_kv_pages(self.pools, flat)
+            arrays["kv_k"] = np.asarray(kv["k"])
+            arrays["kv_v"] = np.asarray(kv["v"])
+        if host_pages:
+            arrays["host_pages"] = host_pages
+        return header, arrays
+
+    def restore_state(self, header: Dict, arrays: Dict) -> Dict[str, int]:
+        """Adopt a migrated tenant: fresh page allocation on OUR MMU,
+        block-table rebuild (dirty rows upload on the next view), KV
+        payload scattered to the new physical pages, decode state synced,
+        PRNG stream adopted.  In-flight requests land on their original
+        slot index when free (keeps the sampled noise stream aligned
+        row-for-row), else the first free slot."""
+        g = header["geometry"]
+        mine = self.geometry()
+        if g != mine:
+            raise ValueError(
+                f"migration geometry mismatch: snapshot {g} vs "
+                f"destination {mine} — KV pages are not byte-compatible")
+        reqs = header["requests"]
+        free = [i for i in range(self.max_batch)
+                if self.slots[i] is None]
+        if len(reqs) > len(free):
+            raise ValueError(
+                f"destination engine has {len(free)} free slots for "
+                f"{len(reqs)} in-flight migrated requests")
+        mapping = self.mmu.restore_seqs(header["mmu"], slot=self.slot)
+        by_vpage = {(sid, p["vpage"]): p["new_ppage"]
+                    for sid, pl in mapping.items() for p in pl}
+        n_pages = self.mmu.config.n_pages
+        if header["pages"]:
+            new_pps = [by_vpage[(p["seq_id"], p["vpage"])]
+                       for p in header["pages"]]
+            flat = flat_page_indices(new_pps, self.cfg.n_layers, n_pages)
+            self.pools = scatter_kv_pages(
+                self.pools, flat, {"k": jnp.asarray(arrays["kv_k"]),
+                                   "v": jnp.asarray(arrays["kv_v"])})
+        for key, data in (arrays.get("host_pages") or {}).items():
+            sid, vpage = (int(x) for x in key.split(":"))
+            flat = flat_page_indices([by_vpage[(sid, vpage)]],
+                                     self.cfg.n_layers, n_pages)
+            self.pools = scatter_kv_pages(
+                self.pools, flat, {"k": jnp.asarray(data["k"]),
+                                   "v": jnp.asarray(data["v"])})
+        slots_i, rows = [], []
+        for rd in reqs:
+            req = self._req_from_dict(rd)
+            want = int(rd.get("slot", -1))
+            i = want if (0 <= want < self.max_batch
+                         and self.slots[want] is None) else free[0]
+            free.remove(i)
+            self.slots[i] = req
+            self.block_table.bind(i, req.rid)
+            assert req.out_tokens, "in-flight request without prefill"
+            slots_i.append(i)
+            rows.append((len(req.prompt) + len(req.out_tokens) - 1,
+                         req.out_tokens[-1], req.temperature,
+                         req.top_k, req.top_p))
+        if slots_i:
+            self._sync_slot_state(slots_i, rows)
+        for rd in header["queue"]:
+            self.queue.append(self._req_from_dict(rd))
+        self.rng = jnp.asarray(arrays["rng"])
+        adopted = ([r["rid"] for r in reqs]
+                   + [r["rid"] for r in header["queue"]])
+        if adopted:
+            self._rid_next = max(self._rid_next, max(adopted) + 1)
+        return {"requests": len(reqs), "queued": len(header["queue"]),
+                "pages": len(header["pages"])
+                + len(arrays.get("host_pages") or {})}
+
+    def evacuate(self) -> Dict[str, int]:
+        """Release the tenant's paged state AFTER a successful snapshot
+        restore elsewhere: free every sequence on our MMU (returning the
+        pages to the shared pool), unbind block-table rows, clear the
+        run queue.  The engine stays usable for new work."""
+        freed, n_seqs = [], 0
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                self.mmu.free_seq(req.rid)
+                self.block_table.unbind(i)
+                self.slots[i] = None
+                freed.append(i)
+                n_seqs += 1
+        if freed:
+            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0)] * len(freed))
+        n_q = len(self.queue)
+        self.queue.clear()
+        return {"seqs": n_seqs, "queued": n_q}
 
     def run(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()

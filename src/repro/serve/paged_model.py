@@ -101,6 +101,49 @@ def write_prefill(pools, layer_kv, tables, lens, page_size: int):
     return {"k": write(pools["k"], ks), "v": write(pools["v"], vs)}
 
 
+def flat_page_indices(ppages, n_layers: int, n_pages: int) -> jnp.ndarray:
+    """Flat pool slots of physical pages ``ppages`` across every layer.
+
+    Layer ``l``'s copy of page ``p`` lives at flat slot ``l*n_pages + p``
+    (the pool layout contract above), so the result is layer-major:
+    ``[l0p0, l0p1, ..., l1p0, ...]`` with shape ``(n_layers * len(ppages),)``.
+    Both the migration gather and the evict-with-copy pager use this
+    ordering — gather and scatter MUST agree on it for KV bytes to land
+    back on the right (layer, page) after a move.
+    """
+    pp = jnp.asarray(ppages, jnp.int32).reshape(-1)
+    base = jnp.arange(n_layers, dtype=jnp.int32)[:, None] * n_pages
+    return (base + pp[None, :]).reshape(-1)
+
+
+@jax.jit
+def gather_kv_pages(pools, flat_idx):
+    """Device-side compact gather of live KV pages.
+
+    ``flat_idx`` (n,) int32 flat pool slots (see :func:`flat_page_indices`);
+    returns ``{"k": (n, page, K, hd), "v": ...}`` — the transfer buffer a
+    migration snapshot ships, and the payload the MMU pager preserves on
+    evict.  Pools are NOT donated (the source keeps serving until the
+    move commits).  Retraces per distinct gather size — this is the cold
+    control path, not the decode loop.
+    """
+    _count_trace("gather_kv_pages")
+    return {"k": jnp.take(pools["k"], flat_idx, axis=0),
+            "v": jnp.take(pools["v"], flat_idx, axis=0)}
+
+
+@functools.partial(jax.jit, donate_argnames=("pools",))
+def scatter_kv_pages(pools, flat_idx, data):
+    """Scatter a gathered transfer buffer back into (donated) pools at
+    ``flat_idx`` — the restore half of migration and of the pager's
+    fault-back-in.  ``data`` must use :func:`flat_page_indices` ordering."""
+    _count_trace("scatter_kv_pages")
+    return {"k": pools["k"].at[flat_idx].set(
+                data["k"].astype(pools["k"].dtype)),
+            "v": pools["v"].at[flat_idx].set(
+                data["v"].astype(pools["v"].dtype))}
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
                    donate_argnames=("pools", "rng"))
 def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
