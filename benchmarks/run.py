@@ -46,6 +46,8 @@ SUITES = [
      "Multi-slot executor lanes: two-tenant p50/p99 A/B + preemption"),
     ("live_migrate", "bench_migrate",
      "Live tenant migration: downtime vs KV footprint + bystander p99"),
+    ("prefix_sharing", "bench_prefix",
+     "Prefix sharing: 90%-shared prefill cost + effective KV capacity"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
@@ -59,6 +61,7 @@ JSON_ARTIFACTS = {
     "kernel_microbench": ("BENCH_kernels.json", "bench_kernels"),
     "multislot_lanes": ("BENCH_multislot.json", "bench_multislot"),
     "live_migrate": ("BENCH_migrate.json", "bench_migrate"),
+    "prefix_sharing": ("BENCH_prefix.json", "bench_prefix"),
 }
 
 

@@ -43,7 +43,8 @@ HISTORY_PATH = "BENCH_HISTORY.jsonl"
 # trend on the lanes-on p99 speedup.  scripts/diff_bench.py consumes
 # THIS list, so both tools always agree on a row's primary metric.
 EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1),
-                 ("p99_speedup_x", +1))
+                 ("p99_speedup_x", +1), ("prefill_speedup_x", +1),
+                 ("capacity_x", +1))
 
 
 def metric_of(row: Dict) -> Optional[tuple]:

@@ -53,7 +53,11 @@ from repro.core.bitstream import BitstreamError
 
 # Bumped whenever the migration header/array layout changes; a snapshot
 # from a different version is refused (BitstreamError), never guessed at.
-MIGRATION_STATE_VERSION = 1
+# v2: shared-page dedup — ``header["pages"]`` lists each physical page
+# once (``{"ppage"}`` entries, no per-seq duplicates), host payloads key
+# by host slot (``"h:<slot>"``), and the MMU snapshot carries per-page
+# host_slot + prefix-index chain hashes so restore rebuilds sharing.
+MIGRATION_STATE_VERSION = 2
 
 
 class MigrationError(RuntimeError):

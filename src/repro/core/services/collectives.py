@@ -40,8 +40,9 @@ class CollectiveService(Service):
                     "wire_bytes", "status", "configure")
     PORT_MEM_MODEL = "device"
 
-    def __init__(self, config: CollectiveConfig = CollectiveConfig()):
-        super().__init__(config)
+    def __init__(self, config: Optional[CollectiveConfig] = None):
+        super().__init__(config if config is not None
+                         else CollectiveConfig())
         self._qps: Dict[int, Tuple[int, int]] = {}   # qp id -> (src, dst)
         self._next_qp = 1
 

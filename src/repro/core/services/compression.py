@@ -59,8 +59,9 @@ class GradCompression(Service):
                     "apply", "ratio_metrics", "status", "configure")
     PORT_MEM_MODEL = "device"
 
-    def __init__(self, config: CompressionConfig = CompressionConfig()):
-        super().__init__(config)
+    def __init__(self, config: Optional[CompressionConfig] = None):
+        super().__init__(config if config is not None
+                         else CompressionConfig())
         self._apply_jit = None
 
     def init_state(self, params) -> Any:

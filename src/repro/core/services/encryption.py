@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -154,7 +154,9 @@ class AESService(Service):
     PORT_METHODS = ("encrypt", "status", "configure")
     PORT_MEM_MODEL = "host"
 
-    def __init__(self, config: AESConfig = AESConfig()):
+    def __init__(self, config: Optional[AESConfig] = None):
+        if config is None:
+            config = AESConfig()
         super().__init__(config)
         self._set_key(config.key_hex)
 

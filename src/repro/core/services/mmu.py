@@ -14,6 +14,12 @@ channels.  The TPU adaptation is a *paged KV-cache manager*:
   * striping         = pages round-robined over N channels (HBM banks)
   * huge pages       = page_size is fully parametric (the 1 GB analogue is
                        a whole-sequence page)
+  * shared pages     = physical pages are REFCOUNTED: sequences with a
+                       common prompt prefix map the same pages
+                       (content-keyed prefix index consulted by
+                       ``alloc_seq(prompt_tokens=...)``), and a write
+                       translation to a shared page copy-on-writes
+                       (``translate(for_write=True)``)
 
 The device-side consumer is the paged-attention Pallas kernel
 (``repro.kernels.paged_attention``), which walks ``block_table()`` output —
@@ -21,10 +27,11 @@ the hardware TLB lookup of the paper, reshaped for the MXU.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,6 +51,7 @@ class MMUConfig:
     tlb_assoc: int = 4
     n_channels: int = 8                  # striping channels (HBM banks)
     host_pool_pages: int = 16384         # host "swap" capacity
+    prefix_sharing: bool = True          # content-keyed CoW page sharing
 
 
 @dataclass
@@ -52,6 +60,17 @@ class PageTableEntry:
     ppage: int                           # device pool slot, -1 if on host
     on_host: bool = False
     host_slot: int = -1
+
+
+def _chain_hash(prev: str, block: Sequence[int]) -> str:
+    """Content key of a token page, chained over the whole prefix: page
+    j's hash covers tokens [0, (j+1)*page_size) — exactly the tokens the
+    page's KV depends on under causal attention, so equal hash implies
+    byte-equal KV for any two sequences."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(prev.encode("ascii"))
+    h.update(np.asarray(list(block), np.int64).tobytes())
+    return h.hexdigest()
 
 
 @dataclass
@@ -121,6 +140,17 @@ class PageFaultError(Exception):
     pass
 
 
+def _share_key(sid: int, p: Dict[str, Any]) -> Tuple:
+    """Physical identity of a snapshotted page: snapshot entries with the
+    same key were one physical page at the source and restore to one
+    page at the destination.  Host pages without a recorded slot (legacy
+    snapshots) are conservatively treated as private."""
+    if p["on_host"]:
+        hslot = int(p.get("host_slot", -1))
+        return ("h", hslot) if hslot >= 0 else ("u", sid, int(p["vpage"]))
+    return ("d", int(p["ppage"]))
+
+
 class MMU(Service):
     """The paged-memory service.  Thread-safe; the 'driver' half."""
 
@@ -130,9 +160,13 @@ class MMU(Service):
                     "configure", "snapshot_seqs")
     PORT_MEM_MODEL = "paged"
 
-    def __init__(self, config: MMUConfig = MMUConfig(),
+    def __init__(self, config: Optional[MMUConfig] = None,
                  interrupt_post: Optional[Callable[[int, int], None]] = None):
-        super().__init__(config)
+        # None sentinel, NOT `config=MMUConfig()`: a dataclass default in
+        # the signature is one shared instance across every default-
+        # constructed MMU, so a later in-place configure() could alias
+        # shells (frozen today, but the aliasing is a trap)
+        super().__init__(config if config is not None else MMUConfig())
         self._lock = threading.RLock()
         self._post = interrupt_post or (lambda slot, val: None)
         # evict-with-copy pager (registered by the page-data owner, e.g.
@@ -156,9 +190,20 @@ class MMU(Service):
         # host-resident page payloads, keyed by host slot: filled by the
         # pager's gather on evict, drained by scatter on fault-back-in
         self._host_data: Dict[int, Any] = {}
+        # copy-on-write prefix sharing: physical pages are refcounted —
+        # a device page (or a host slot, after eviction) may back the
+        # same vpage of many sequences.  The prefix index maps a chain
+        # hash of full prompt-token pages to the canonical physical page
+        # holding that prefix's KV; alloc_seq() consults it.
+        self._ref: Dict[int, int] = {}            # device ppage -> refs
+        self._host_ref: Dict[int, int] = {}       # host slot -> refs
+        self._prefix_index: Dict[str, int] = {}   # chain hash -> ppage
+        self._page_hash: Dict[int, str] = {}      # ppage -> chain hash
         self.page_faults = 0
         self.migrations_out = 0
         self.migrations_in = 0
+        self.prefix_hits = 0                      # pages mapped shared
+        self.cow_faults = 0                       # CoW page copies
 
     def _bump_map(self, seq_id: int) -> None:
         self._map_version[seq_id] = self._map_version.get(seq_id, 0) + 1
@@ -174,14 +219,82 @@ class MMU(Service):
             self._init_pools()
 
     # -- allocation -----------------------------------------------------------
-    def alloc_seq(self, seq_id: int, n_tokens: int = 0, *, slot: int = 0) -> None:
+    def alloc_seq(self, seq_id: int, n_tokens: int = 0, *, slot: int = 0,
+                  prompt_tokens: Optional[Sequence[int]] = None) -> int:
+        """Allocate a sequence of ``n_tokens``; returns the number of
+        prompt tokens whose pages were mapped SHARED (0 without sharing).
+
+        With ``prompt_tokens`` and ``config.prefix_sharing``, every full
+        page of the prompt is looked up in the content-keyed prefix
+        index: a hit maps the existing physical page with
+        ``refcount += 1`` instead of allocating — the caller may then
+        skip prefill compute for the covered prefix entirely.  Full
+        pages that miss are allocated privately and REGISTERED under
+        their chain hash; the allocator owns filling them with the
+        prefix's KV in the same admission pass (the serving engine's
+        prefill does), which is what makes them canonical for later
+        sequences.
+        """
+        hashes: List[str] = []
+        if prompt_tokens is not None and self.config.prefix_sharing:
+            ps = self.config.page_size
+            h = ""
+            for j in range(len(prompt_tokens) // ps):
+                h = _chain_hash(h, prompt_tokens[j * ps:(j + 1) * ps])
+                hashes.append(h)
+        covered = 0
         with self._lock:
             if seq_id in self._seqs:
                 raise KeyError(f"seq {seq_id} already allocated")
-            self._seqs[seq_id] = SeqEntry(seq_id=seq_id)
+            se = SeqEntry(seq_id=seq_id)
+            self._seqs[seq_id] = se
             self._map_version[seq_id] = 0
-        if n_tokens:
-            self.extend_seq(seq_id, n_tokens, slot=slot)
+            for j, h in enumerate(hashes):
+                pp = self._prefix_index.get(h)
+                if pp is None:
+                    break
+                se.pages.append(PageTableEntry(vpage=j, ppage=pp))
+                self._ref[pp] = self._ref.get(pp, 0) + 1
+                covered += self.config.page_size
+                self.prefix_hits += 1
+            if covered:
+                se.length = covered
+                self._bump_map(seq_id)
+        if n_tokens > covered:
+            self.extend_seq(seq_id, n_tokens - covered, slot=slot)
+        if hashes:
+            with self._lock:
+                se = self._seqs.get(seq_id)
+                ncov = covered // self.config.page_size
+                for j in range(ncov, len(hashes)):
+                    if se is None or j >= len(se.pages):
+                        break
+                    pte = se.pages[j]
+                    if (pte.on_host or pte.ppage < 0
+                            or pte.ppage in self._page_hash
+                            or hashes[j] in self._prefix_index):
+                        continue
+                    self._prefix_index[hashes[j]] = pte.ppage
+                    self._page_hash[pte.ppage] = hashes[j]
+        return covered
+
+    def probe_prefix(self, prompt_tokens: Sequence[int]) -> int:
+        """How many leading prompt tokens the prefix index would map to
+        shared pages RIGHT NOW, without allocating anything — admission
+        control uses this to charge a templated request only for its
+        uncovered suffix."""
+        if not self.config.prefix_sharing:
+            return 0
+        ps = self.config.page_size
+        covered = 0
+        h = ""
+        with self._lock:
+            for j in range(len(prompt_tokens) // ps):
+                h = _chain_hash(h, prompt_tokens[j * ps:(j + 1) * ps])
+                if h not in self._prefix_index:
+                    break
+                covered += ps
+        return covered
 
     def extend_seq(self, seq_id: int, n_tokens: int, *, slot: int = 0) -> None:
         """Grow a sequence; allocates pages on demand (the page-fault path
@@ -210,7 +323,9 @@ class MMU(Service):
             self._evict_seq_page(victim)
             if not self._free:
                 raise PageFaultError("eviction failed to free a page")
-        return self._free.pop()
+        pp = self._free.pop()
+        self._ref[pp] = 1
+        return pp
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         # evict from the longest resident sequence (simple, deterministic)
@@ -286,19 +401,59 @@ class MMU(Service):
             if not pte.on_host:
                 if not self._host_free:
                     raise PageFaultError("host pool exhausted")
-                pte.on_host = True
-                pte.host_slot = self._host_free.pop()
+                pp = pte.ppage
+                hslot = self._host_free.pop()
                 if self._pager_gather is not None:
                     # REAL migration: copy the page payload to the host
                     # store before the device page is recycled
-                    self._host_data[pte.host_slot] = \
-                        self._pager_gather(pte.ppage)
-                self._free.append(pte.ppage)
-                pte.ppage = -1
+                    self._host_data[hslot] = self._pager_gather(pp)
+                # a shared page moves for EVERY sharer at once: one host
+                # slot backs the group, refcount transfers device->host
+                sharers = set()
+                for sid2, se2 in self._seqs.items():
+                    for p2 in se2.pages:
+                        if not p2.on_host and p2.ppage == pp:
+                            p2.on_host = True
+                            p2.host_slot = hslot
+                            p2.ppage = -1
+                            sharers.add(sid2)
+                self._host_ref[hslot] = max(self._ref.pop(pp, 1),
+                                            len(sharers))
+                self._unregister_page(pp)    # evicted pages leave the
+                self._free.append(pp)        # prefix index: no new shares
                 self.migrations_out += 1
-                self.tlb.invalidate(seq_id)
-                self._bump_map(seq_id)
+                for sid2 in sharers:
+                    self.tlb.invalidate(sid2)
+                    self._bump_map(sid2)
                 return
+
+    def _unregister_page(self, ppage: int) -> None:
+        h = self._page_hash.pop(ppage, None)
+        if h is not None and self._prefix_index.get(h) == ppage:
+            self._prefix_index.pop(h, None)
+
+    def _drop_host_ref(self, hslot: int) -> None:
+        """Release one reference to a host slot; the stored payload is
+        dropped only when the LAST reference dies (shared pages evicted
+        to host stay restorable for every surviving sharer)."""
+        n = self._host_ref.get(hslot, 1) - 1
+        if n <= 0:
+            self._host_ref.pop(hslot, None)
+            self._host_free.append(hslot)
+            self._host_data.pop(hslot, None)
+        else:
+            self._host_ref[hslot] = n
+
+    def _drop_page_ref(self, ppage: int) -> None:
+        """Release one reference to a device page; recycle it into the
+        free pool only at refcount 0."""
+        n = self._ref.get(ppage, 1) - 1
+        if n <= 0:
+            self._ref.pop(ppage, None)
+            self._unregister_page(ppage)
+            self._free.append(ppage)
+        else:
+            self._ref[ppage] = n
 
     def free_seq(self, seq_id: int) -> None:
         with self._lock:
@@ -306,44 +461,100 @@ class MMU(Service):
             self._map_version.pop(seq_id, None)
             for pte in se.pages:
                 if pte.on_host:
-                    self._host_free.append(pte.host_slot)
-                    self._host_data.pop(pte.host_slot, None)
+                    self._drop_host_ref(pte.host_slot)
                 else:
-                    self._free.append(pte.ppage)
+                    self._drop_page_ref(pte.ppage)
             n = self.tlb.invalidate(seq_id)
             if n:
                 self._post(0, seq_id)                    # TLB invalidation
 
     # -- translation -----------------------------------------------------------
     def translate(self, seq_id: int, token_pos: int, *,
-                  slot: int = 0) -> Tuple[int, int]:
+                  slot: int = 0, for_write: bool = False) -> Tuple[int, int]:
         """(seq, pos) -> (physical page, offset).  TLB first, then the
-        driver walk; host-resident pages fault back in."""
+        driver walk; host-resident pages fault back in.
+
+        ``for_write`` declares intent to MUTATE the page: a translation
+        that lands on a shared page (refcount > 1) then triggers
+        copy-on-write — a fresh page is allocated, the payload is copied
+        device-side through the registered pager hooks, this sequence is
+        remapped to the private copy and the shared page's refcount
+        drops.  Other sharers keep reading the original bytes.  Write
+        translations bypass the TLB fast path (a cached translation
+        cannot see the refcount)."""
         c: MMUConfig = self.config
         vpage, off = divmod(token_pos, c.page_size)
-        ppage = self.tlb.lookup(seq_id, vpage)
-        if ppage is not None:
-            return ppage, off
+        if not for_write:
+            ppage = self.tlb.lookup(seq_id, vpage)
+            if ppage is not None:
+                return ppage, off
         with self._lock:                                 # driver walk
             se = self._seqs.get(seq_id)
             if se is None or vpage >= len(se.pages):
                 raise PageFaultError(f"unmapped: seq {seq_id} page {vpage}")
             pte = se.pages[vpage]
             if pte.on_host:                              # migrate back in
-                self.page_faults += 1
-                self._post(slot, seq_id)
-                pte.ppage = self._take_device_page(seq_id, slot)
-                data = self._host_data.pop(pte.host_slot, None)
-                if data is not None and self._pager_scatter is not None:
-                    # restore the preserved payload into the fresh page
-                    self._pager_scatter(pte.ppage, data)
-                self._host_free.append(pte.host_slot)
-                pte.on_host = False
-                pte.host_slot = -1
-                self.migrations_in += 1
-                self._bump_map(seq_id)
+                self._fault_in(seq_id, pte, slot)
+            if for_write and self._ref.get(pte.ppage, 1) > 1:
+                self._cow(seq_id, pte, slot)
             self.tlb.insert(seq_id, vpage, pte.ppage)
             return pte.ppage, off
+
+    def _fault_in(self, seq_id: int, pte: PageTableEntry,
+                  slot: int) -> None:
+        """Bring a host-resident page back onto the device — for EVERY
+        sharer of its host slot at once (they reference the same bytes;
+        one fresh page serves the group, refcount transfers host->device
+        and the preserved payload is drained exactly once)."""
+        self.page_faults += 1
+        self._post(slot, seq_id)
+        hslot = pte.host_slot
+        new_pp = self._take_device_page(seq_id, slot)
+        data = self._host_data.pop(hslot, None)
+        if data is not None and self._pager_scatter is not None:
+            # restore the preserved payload into the fresh page
+            self._pager_scatter(new_pp, data)
+        sharers = set()
+        for sid2, se2 in self._seqs.items():
+            for p2 in se2.pages:
+                if p2.on_host and p2.host_slot == hslot:
+                    p2.on_host = False
+                    p2.host_slot = -1
+                    p2.ppage = new_pp
+                    sharers.add(sid2)
+        self._ref[new_pp] = max(self._host_ref.pop(hslot, 1),
+                                len(sharers))
+        self._host_free.append(hslot)
+        self.migrations_in += 1
+        for sid2 in sharers:
+            self.tlb.invalidate(sid2)
+            self._bump_map(sid2)
+
+    def _cow(self, seq_id: int, pte: PageTableEntry, slot: int) -> None:
+        """Copy-on-write: detach ``seq_id``'s mapping of a shared page
+        onto a private copy.  The payload is gathered BEFORE the new
+        page is taken — the allocation may evict the shared page (moving
+        this very mapping to host), and the pre-gathered bytes stay
+        valid either way."""
+        old = pte.ppage
+        payload = None
+        if self._pager_gather is not None:
+            payload = self._pager_gather(old)
+        new_pp = self._take_device_page(seq_id, slot)
+        if pte.on_host:
+            # the allocation above evicted the shared group (us included)
+            # to host: release our host reference, adopt the fresh page
+            self._drop_host_ref(pte.host_slot)
+            pte.on_host = False
+            pte.host_slot = -1
+        else:
+            self._drop_page_ref(old)
+        pte.ppage = new_pp
+        if payload is not None and self._pager_scatter is not None:
+            self._pager_scatter(new_pp, payload)
+        self.cow_faults += 1
+        self.tlb.invalidate(seq_id)
+        self._bump_map(seq_id)
 
     # -- device-side views ------------------------------------------------------
     def block_table(self, seq_ids: List[int], max_pages: int) -> np.ndarray:
@@ -390,18 +601,27 @@ class MMU(Service):
         """JSON-safe page-table snapshot of a tenant's sequences — the
         MMU half of a migration state container.  Captures lengths and
         per-page mapping state (vpage order, device ppage, host
-        residency); page *payloads* are gathered separately by the pool
-        owner (``repro.serve.paged_model.gather_kv_pages``)."""
+        residency + host slot so shared pages stay groupable, and the
+        prefix-index chain hash when the page is content-registered);
+        page *payloads* are gathered separately by the pool owner
+        (``repro.serve.paged_model.gather_kv_pages``) — ONCE per
+        physical page, however many sequences share it."""
         with self._lock:
             seqs = []
             for sid in seq_ids:
                 se = self._seqs[sid]
-                seqs.append({
-                    "seq_id": int(sid), "length": int(se.length),
-                    "pages": [{"vpage": int(p.vpage),
-                               "ppage": int(p.ppage),
-                               "on_host": bool(p.on_host)}
-                              for p in se.pages]})
+                pages = []
+                for p in se.pages:
+                    pd = {"vpage": int(p.vpage), "ppage": int(p.ppage),
+                          "on_host": bool(p.on_host),
+                          "host_slot": int(p.host_slot)}
+                    h = self._page_hash.get(p.ppage) if not p.on_host \
+                        else None
+                    if h is not None:
+                        pd["hash"] = h
+                    pages.append(pd)
+                seqs.append({"seq_id": int(sid), "length": int(se.length),
+                             "pages": pages})
             return {"page_size": int(self.config.page_size), "seqs": seqs}
 
     def restore_seqs(self, snap: Dict[str, Any], *, slot: int = 0
@@ -411,12 +631,17 @@ class MMU(Service):
         that were host-evicted at the source).
 
         Returns ``{seq_id: [{"vpage", "old_ppage", "new_ppage",
-        "was_host"}, ...]}`` — the page map the caller uses to scatter
-        the migrated KV payload into the destination pools
+        "was_host", "host_slot"}, ...]}`` — the page map the caller uses
+        to scatter the migrated KV payload into the destination pools
         (``old_ppage`` is -1 for pages that were host-resident).
-        Page-size geometry must match; colliding sequence ids are
-        refused (migrating tenants must use disjoint id ranges,
-        ``ServingEngine(rid_base=...)``).
+        SHARING IS PRESERVED: snapshot pages backed by the same source
+        physical page (same device ppage, or same host slot) restore to
+        ONE destination page with the refcount rebuilt, so a migrated
+        fleet of templated tenants never explodes capacity; pages
+        carrying a prefix-index chain hash are re-registered so future
+        allocations on this MMU share them too.  Page-size geometry must
+        match; colliding sequence ids are refused (migrating tenants
+        must use disjoint id ranges, ``ServingEngine(rid_base=...)``).
         """
         if int(snap.get("page_size", -1)) != self.config.page_size:
             raise PageFaultError(
@@ -426,6 +651,7 @@ class MMU(Service):
                 "across page geometries")
         mapping: Dict[int, List[Dict[str, int]]] = {}
         with self._lock:
+            keys = set()
             for sd in snap["seqs"]:
                 sid = int(sd["seq_id"])
                 if sid in self._seqs:
@@ -433,29 +659,45 @@ class MMU(Service):
                         f"seq {sid} already allocated on the destination "
                         "MMU (sequence id collision — use disjoint "
                         "rid_base ranges per tenant)")
-            # demand upfront capacity: restoring THROUGH the eviction
-            # path could evict pages allocated earlier in this very
-            # restore (the returned mapping would dangle) — an incoming
-            # tenant must fit, it never steals resident tenants' pages
-            need = sum(len(sd["pages"]) for sd in snap["seqs"])
+                for p in sd["pages"]:
+                    keys.add(_share_key(sid, p))
+            # demand upfront capacity for the UNIQUE page set: restoring
+            # THROUGH the eviction path could evict pages allocated
+            # earlier in this very restore (the returned mapping would
+            # dangle) — an incoming tenant must fit, it never steals
+            # resident tenants' pages
+            need = len(keys)
             if need > len(self._free):
                 raise PageFaultError(
                     f"destination pool has {len(self._free)} free pages "
                     f"for a {need}-page incoming tenant; migration "
                     "needs upfront capacity (free sequences or use a "
                     "larger pool)")
+            new_map: Dict[Tuple[str, int], int] = {}
             for sd in snap["seqs"]:
                 sid = int(sd["seq_id"])
                 se = SeqEntry(seq_id=sid, length=int(sd["length"]))
                 pages = []
                 for p in sorted(sd["pages"], key=lambda x: x["vpage"]):
-                    new_pp = self._take_device_page(sid, slot)
+                    hslot = int(p.get("host_slot", -1))
+                    key = _share_key(sid, p)
+                    if key in new_map:                 # shared at source:
+                        new_pp = new_map[key]          # re-share here
+                        self._ref[new_pp] = self._ref.get(new_pp, 0) + 1
+                    else:
+                        new_pp = self._take_device_page(sid, slot)
+                        new_map[key] = new_pp
+                        h = p.get("hash")
+                        if h and h not in self._prefix_index:
+                            self._prefix_index[h] = new_pp
+                            self._page_hash[new_pp] = h
                     se.pages.append(PageTableEntry(vpage=int(p["vpage"]),
                                                    ppage=new_pp))
                     pages.append({"vpage": int(p["vpage"]),
                                   "old_ppage": int(p["ppage"]),
                                   "new_ppage": new_pp,
-                                  "was_host": bool(p["on_host"])})
+                                  "was_host": bool(p["on_host"]),
+                                  "host_slot": hslot})
                 self._seqs[sid] = se
                 self._map_version[sid] = 0
                 self._bump_map(sid)
@@ -475,6 +717,13 @@ class MMU(Service):
                 "page_faults": self.page_faults,
                 "migrations_out": self.migrations_out,
                 "migrations_in": self.migrations_in,
+                # CoW prefix sharing: how much physical memory the
+                # refcounts are multiplying
+                "pages_shared": sum(1 for r in self._ref.values() if r > 1),
+                "shared_mappings": sum(r - 1 for r in self._ref.values()
+                                       if r > 1),
+                "prefix_hits": self.prefix_hits,
+                "cow_faults": self.cow_faults,
             }
 
     def status(self) -> Dict[str, Any]:

@@ -57,7 +57,9 @@ class TrafficSniffer(Service):
                     "filter_id": CSR_SNIFFER_FILTER_ID}
     PORT_MEM_MODEL = "host"
 
-    def __init__(self, config: SnifferConfig = SnifferConfig()):
+    def __init__(self, config: Optional[SnifferConfig] = None):
+        if config is None:
+            config = SnifferConfig()
         super().__init__(config)
         self._ring: deque = deque(maxlen=config.buffer_packets)
         self._running = False

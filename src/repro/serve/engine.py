@@ -27,8 +27,10 @@ Hot-path invariants (the Coyote v2 "shell out of the datapath" story):
     tensor never leaves the device.  The only per-step host<->device
     traffic is reading back the (B,) int32 token vector.
   * **Batched prefill.**  All requests admitted in one ``_admit()`` pass
-    run as a single padded forward (``prefill_paged``), with prompt
-    lengths and batch counts bucketed to powers of two to bound retraces.
+    run as a single padded forward (``prefill_shared_paged``), with
+    suffix lengths and batch counts bucketed to powers of two to bound
+    retraces.  Prompt pages the MMU mapped onto shared prefix pages are
+    skipped entirely — only the uncovered suffix is computed.
   * **Non-blocking billing.**  Decode-step I/O is submitted to the shell
     scheduler asynchronously; credits settle at step boundaries
     (``_settle_io``) and ``flush_io()`` drains the tail, so in normal
@@ -60,7 +62,8 @@ from repro.configs.base import ModelConfig
 from repro.core.services.mmu import MMU, MMUConfig
 from repro.serve.paged_model import (decode_step_paged, flat_page_indices,
                                      gather_kv_pages, make_pools,
-                                     prefill_paged, scatter_kv_pages)
+                                     prefill_shared_paged,
+                                     scatter_kv_pages)
 
 
 @dataclass
@@ -119,6 +122,10 @@ class ServingEngine:
         self.completed: List[Request] = []
         self.steps = 0
         self.tokens_out = 0
+        # prefix-sharing accounting: prompt tokens actually run through a
+        # prefill forward vs tokens whose KV came from shared pages
+        self.prefill_computed = 0
+        self.prefill_skipped = 0
         # Device-resident decode state: block tables (cached MMU view),
         # row lengths, last tokens, temperatures, PRNG key.
         self.block_table = mmu.block_table_device(max_batch, self.max_pages)
@@ -173,6 +180,12 @@ class ServingEngine:
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
                temperature: float = 0.0, top_k: int = 0,
                top_p: float = 1.0, tid: int = 0) -> int:
+        if prompt and (min(prompt) < 0 or max(prompt) >= self.cfg.vocab_size):
+            # out-of-range ids would embed as NaN (XLA gathers fill OOB
+            # reads) and silently poison the KV cache; fail at the door
+            raise ValueError(
+                f"prompt token out of range for vocab_size="
+                f"{self.cfg.vocab_size}")
         rid = self._rid_next
         self._rid_next += 1
         self.queue.append(Request(
@@ -196,49 +209,74 @@ class ServingEngine:
                 continue
             req = self.queue[0]
             need = -(-(len(req.prompt) + req.max_new_tokens) // self.page)
+            # prefix-shared pages cost no new capacity: charge admission
+            # credits only for the uncovered suffix
+            need -= self.mmu.probe_prefix(req.prompt) // self.page
             if need > self.mmu.config.n_pages - (
                     self.mmu.utilization()["pages_used"]):
                 break                          # page credits exhausted
             self.queue.popleft()
-            self.mmu.alloc_seq(req.rid, len(req.prompt), slot=i)
+            covered = self.mmu.alloc_seq(req.rid, len(req.prompt), slot=i,
+                                         prompt_tokens=req.prompt)
             self.slots[i] = req
             self.block_table.bind(i, req.rid)
-            admitted.append((i, req))
+            admitted.append((i, req, covered))
         if admitted:
             self._prefill_batch(admitted)
 
     def _prefill_batch(self, admitted) -> None:
-        """One padded forward for every request admitted in this pass."""
+        """One padded forward for every request admitted in this pass.
+
+        ``admitted`` rows are (slot, request, covered) — ``covered`` is
+        the prompt-token count the MMU mapped onto shared prefix pages.
+        Every wave runs through ``prefill_shared_paged``: row j computes
+        only ``prompt[qstart:]`` (all of it at zero coverage; just the
+        last token's query when fully covered).  Using ONE kernel for
+        shared and unshared rows is what makes the sharing-on/off parity
+        bit-exact — a row's ops depend only on its own tokens, absolute
+        positions, and page bytes, so identical rows produce identical
+        tokens whatever the rest of the wave skipped.
+        """
         n = len(admitted)
         nb = _bucket(n, self.max_batch)
-        smax = max(len(r.prompt) for _, r in admitted)
-        sb = _bucket(smax, 1 << 30)
+        smax = max(len(r.prompt) for _, r, _ in admitted)
         # prompts may exceed max_len (such requests finish right after
         # prefill): size the prefill tables for the longest prompt
-        maxp = max(self.max_pages, -(-sb // self.page))
-        tokens = np.zeros((nb, sb), np.int32)
-        lens = np.zeros((nb,), np.int32)
+        maxp = max(self.max_pages, -(-_bucket(smax, 1 << 30) // self.page))
         temps = np.zeros((nb,), np.float32)
         topks = np.zeros((nb,), np.int32)
         topps = np.ones((nb,), np.float32)
         tables = np.full((nb, maxp), -1, np.int32)
         tables[:n] = self.mmu.block_table(
-            [req.rid for _, req in admitted], maxp)
-        for j, (_, req) in enumerate(admitted):
-            tokens[j, :len(req.prompt)] = req.prompt
-            lens[j] = len(req.prompt)
+            [req.rid for _, req, _ in admitted], maxp)
+        q_starts = np.zeros((nb,), np.int32)
+        q_lens = np.zeros((nb,), np.int32)
+        write_from = np.zeros((nb,), np.int32)
+        for j, (_, req, cov) in enumerate(admitted):
             temps[j] = req.temperature
             topks[j] = req.top_k
             topps[j] = req.top_p
-        first, self.pools, self.rng = prefill_paged(
-            self.params, self.pools, jnp.asarray(tokens), jnp.asarray(lens),
-            jnp.asarray(tables), self.rng, jnp.asarray(temps),
-            jnp.asarray(topks), jnp.asarray(topps),
+            plen = len(req.prompt)
+            qstart = cov if cov < plen else plen - 1
+            q_starts[j] = qstart
+            q_lens[j] = plen - qstart
+            write_from[j] = cov
+            self.prefill_computed += plen - qstart
+            self.prefill_skipped += qstart
+        sb = _bucket(int(q_lens.max()), 1 << 30)
+        tokens = np.zeros((nb, sb), np.int32)
+        for j, (_, req, _) in enumerate(admitted):
+            tokens[j, :q_lens[j]] = req.prompt[q_starts[j]:]
+        first, self.pools, self.rng = prefill_shared_paged(
+            self.params, self.pools, jnp.asarray(tokens),
+            jnp.asarray(q_lens), jnp.asarray(q_starts),
+            jnp.asarray(write_from), jnp.asarray(tables), self.rng,
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
             cfg=self.cfg, page_size=self.page)
         first = np.asarray(first)
         now = time.perf_counter()
         slots_i, rows = [], []
-        for j, (i, req) in enumerate(admitted):
+        for j, (i, req, _) in enumerate(admitted):
             tok = int(first[j])
             req.out_tokens.append(tok)
             req.t_first_token = now
@@ -443,20 +481,28 @@ class ServingEngine:
                 for i, r in enumerate(self.slots) if r is not None]
         seq_ids = [r["rid"] for r in reqs]
         mmu_snap = self.mmu.snapshot_seqs(seq_ids)
+        # dedupe: each physical page (device ppage / host slot) ships
+        # ONCE however many sequences share it — restore_seqs rebuilds
+        # the sharing from the per-seq page tables in ``mmu_snap``
         pages, host_pages = [], {}
+        seen_pp = set()
         for sd in mmu_snap["seqs"]:
             for p in sd["pages"]:
                 if p["on_host"]:
+                    hs = int(p.get("host_slot", -1))
+                    key = (f"h:{hs}" if hs >= 0
+                           else f"u:{sd['seq_id']}:{p['vpage']}")
+                    if key in host_pages:
+                        continue
                     data = self.mmu.host_page_data(sd["seq_id"],
                                                    p["vpage"])
                     if data is not None:
-                        host_pages[f"{sd['seq_id']}:{p['vpage']}"] = {
+                        host_pages[key] = {
                             "k": np.asarray(data["k"]),
                             "v": np.asarray(data["v"])}
-                else:
-                    pages.append({"seq_id": sd["seq_id"],
-                                  "vpage": p["vpage"],
-                                  "ppage": p["ppage"]})
+                elif p["ppage"] not in seen_pp:
+                    seen_pp.add(p["ppage"])
+                    pages.append({"ppage": p["ppage"]})
         header = {
             "geometry": self.geometry(),
             "requests": reqs,
@@ -497,20 +543,32 @@ class ServingEngine:
                 f"destination engine has {len(free)} free slots for "
                 f"{len(reqs)} in-flight migrated requests")
         mapping = self.mmu.restore_seqs(header["mmu"], slot=self.slot)
-        by_vpage = {(sid, p["vpage"]): p["new_ppage"]
-                    for sid, pl in mapping.items() for p in pl}
+        # shared source pages restored to ONE destination page each:
+        # index the new ppage by old device ppage / host slot so every
+        # shipped payload (deduped at snapshot) scatters exactly once
+        by_old, by_hslot, by_sv = {}, {}, {}
+        for sid, pl in mapping.items():
+            for p in pl:
+                if p["was_host"]:
+                    if p["host_slot"] >= 0:
+                        by_hslot[p["host_slot"]] = p["new_ppage"]
+                    by_sv[(sid, p["vpage"])] = p["new_ppage"]
+                else:
+                    by_old[p["old_ppage"]] = p["new_ppage"]
         n_pages = self.mmu.config.n_pages
         if header["pages"]:
-            new_pps = [by_vpage[(p["seq_id"], p["vpage"])]
-                       for p in header["pages"]]
+            new_pps = [by_old[p["ppage"]] for p in header["pages"]]
             flat = flat_page_indices(new_pps, self.cfg.n_layers, n_pages)
             self.pools = scatter_kv_pages(
                 self.pools, flat, {"k": jnp.asarray(arrays["kv_k"]),
                                    "v": jnp.asarray(arrays["kv_v"])})
         for key, data in (arrays.get("host_pages") or {}).items():
-            sid, vpage = (int(x) for x in key.split(":"))
-            flat = flat_page_indices([by_vpage[(sid, vpage)]],
-                                     self.cfg.n_layers, n_pages)
+            if key.startswith("h:"):
+                new_pp = by_hslot[int(key[2:])]
+            else:                       # "u:<sid>:<vpage>" legacy pages
+                _, sid, vpage = key.split(":")
+                new_pp = by_sv[(int(sid), int(vpage))]
+            flat = flat_page_indices([new_pp], self.cfg.n_layers, n_pages)
             self.pools = scatter_kv_pages(
                 self.pools, flat, {"k": jnp.asarray(data["k"]),
                                    "v": jnp.asarray(data["v"])})
@@ -574,7 +632,9 @@ class ServingEngine:
         stats = {"wall_s": dt, "engine_steps": self.steps,
                  "tokens": self.tokens_out,
                  "tokens_per_s": self.tokens_out / max(dt, 1e-9),
-                 "completed": len(self.completed)}
+                 "completed": len(self.completed),
+                 "prefill_computed": self.prefill_computed,
+                 "prefill_skipped": self.prefill_skipped}
         if self.shell is not None and self.tenant is not None:
             stats["io_drained"] = drained
             stats["io_pending"] = self.shell.scheduler.tenant_pending(

@@ -170,6 +170,112 @@ def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
     return first, pools, rng
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnames=("pools", "rng"))
+def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
+                         write_from, tables, rng, temperatures,
+                         top_k=None, top_p=None,
+                         *, cfg: ModelConfig, page_size: int):
+    """Suffix prefill for prefix-shared admissions.
+
+    When the MMU maps a prompt's leading pages onto already-resident
+    shared pages (``alloc_seq(..., prompt_tokens=...)``), only the
+    *uncovered suffix* needs a forward pass: the shared pages already
+    hold the exact KV those positions would produce.  This kernel runs
+    the transformer over just the suffix tokens, attending through the
+    block tables (so queries see the shared prefix KV), and scatters
+    new KV only at positions >= ``write_from`` — shared pages are never
+    written, preserving them for their other owners.
+
+    tokens (N, T) int32   — suffix tokens, right-padded; row i holds
+                            prompt[q_starts[i] : q_starts[i]+q_lens[i]];
+    q_lens (N,) int32     — suffix lengths (0 = padding row);
+    q_starts (N,) int32   — absolute position of tokens[i, 0].  For a
+                            fully covered prompt this is len-1: the last
+                            token's query is recomputed to produce
+                            logits, but its KV write is masked off;
+    write_from (N,) int32 — absolute position from which KV is written
+                            (= tokens covered by shared pages);
+    tables (N, maxp)      — block tables for the full prompt (shared
+                            prefix pages + freshly allocated suffix).
+
+    Returns (first_tokens (N,) int32, new_pools, new_rng); ``pools`` and
+    ``rng`` are donated.  Retraces per (N, T, maxp) bucket — admission
+    is the cold path, so this mirrors ``prefill_paged``'s bucketing.
+    """
+    _count_trace("prefill_shared_paged")
+    n, t = tokens.shape
+    maxp = tables.shape[1]
+    n_flat = pools["k"].shape[0]
+    n_pages = n_flat // cfg.n_layers
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    scale = cfg.resolved_head_dim ** -0.5
+    pos = q_starts[:, None] + jnp.arange(t)[None, :]        # (N,T) absolute
+    qvalid = jnp.arange(t)[None, :] < q_lens[:, None]
+    kv_lens = q_starts + q_lens                             # full prompt len
+    vpage = jnp.minimum(pos // page_size, maxp - 1)
+    off = pos % page_size
+    ppage = jnp.take_along_axis(tables, vpage, axis=1)      # (N,T)
+    wvalid = qvalid & (pos >= write_from[:, None]) & (ppage >= 0)
+    kpos = jnp.arange(maxp * page_size)[None]               # (1,S)
+    page_ok = jnp.repeat(tables >= 0, page_size, axis=1)    # (N,S)
+    kv_ok = (kpos < kv_lens[:, None]) & page_ok             # (N,S)
+
+    x = layers.embed_lookup(params["embed"], tokens)        # (N,T,D)
+
+    def body(carry, inp):
+        x, kp, vp = carry
+        li, lp = inp
+        base = li * n_pages
+        h = layers.norm_apply(lp["norm1"], x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(lp["attn"], cfg, h)
+        if cfg.pos_embed == "rope":
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        # scatter suffix KV first so suffix queries see their own keys;
+        # masked-off writes (shared-prefix positions, padding, unmapped
+        # pages) drop at the out-of-bounds slot
+        drop_page = jnp.where(wvalid, base + ppage, n_flat)
+        kp = kp.at[drop_page, off].set(k.astype(kp.dtype), mode="drop")
+        vp = vp.at[drop_page, off].set(v.astype(vp.dtype), mode="drop")
+        # gather the full paged KV (shared prefix + fresh suffix) and
+        # run exact causal attention against it, ref-oracle style
+        safe = jnp.maximum(tables, 0) + base
+        kg = jnp.take(kp, safe.reshape(-1), axis=0).reshape(
+            n, maxp * page_size, kh, -1)
+        vg = jnp.take(vp, safe.reshape(-1), axis=0).reshape(
+            n, maxp * page_size, kh, -1)
+        qf = q.reshape(n, t, kh, g, -1).astype(jnp.float32)
+        s = jnp.einsum("ntkgd,nskd->nkgts", qf,
+                       kg.astype(jnp.float32)) * scale
+        mask = kv_ok[:, None, :] & (kpos[:, None, :] <= pos[:, :, None])
+        s = jnp.where(mask[:, None, None], s, attention.NEG_INF)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        att = jnp.einsum("nkgts,nskd->ntkgd", p, vg.astype(jnp.float32))
+        any_ok = jnp.any(mask, axis=-1)                     # (N,T)
+        att = jnp.where(any_ok[:, :, None, None, None], att, 0.0)
+        att = att.reshape(n, t, cfg.n_heads, -1).astype(x.dtype)
+        x = x + attention.out_proj(lp["attn"], cfg, att)
+        h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
+        if _is_moe_layer(cfg):
+            out, _ = moe.moe_apply(lp["ffn"], cfg, h)
+        else:
+            out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        return (x + out, kp, vp), None
+
+    (x, kpool, vpool), _ = jax.lax.scan(
+        body, (x, pools["k"], pools["v"]),
+        (jnp.arange(cfg.n_layers), params["layers"]))
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
+    last = x[jnp.arange(n), jnp.maximum(q_lens - 1, 0)]     # (N,D)
+    logits = lm_logits(params, cfg, last)[..., :cfg.vocab_size]
+    rng, sub = jax.random.split(rng)
+    first = sample_per_row(sub, logits, temperatures, top_k, top_p)
+    return first, {"k": kpool, "v": vpool}, rng
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size",
                                              "use_pallas",
                                              "pages_per_block"),

@@ -64,9 +64,9 @@ def test_prefill_is_batched_one_forward_per_admit_wave(served):
     eng = ServingEngine(cfg, params, mmu, max_batch=4, max_len=144)
     for n in (5, 9, 12, 7):
         eng.submit(list(range(3, 3 + n)), max_new_tokens=2)
-    before = TRACE_COUNTS.get("prefill_paged", 0)
+    before = TRACE_COUNTS.get("prefill_shared_paged", 0)
     eng.step()      # admits all 4 -> ONE batched prefill trace/call
-    assert TRACE_COUNTS.get("prefill_paged", 0) - before == 1
+    assert TRACE_COUNTS.get("prefill_shared_paged", 0) - before == 1
     assert all(len(r.out_tokens) >= 1 for r in eng.slots if r is not None)
     eng.run()
     assert len(eng.completed) == 4

@@ -111,13 +111,18 @@ def test_migrate_kv_bytes_identical_post_restore(served):
         eng_src.step()
     before = _live_pages(eng_src)
     assert before                             # tenant has live KV
+    # shared prefix pages (the 30- and 17-token prompts open with the
+    # same first page) ship ONCE in the v2 wire format
+    n_phys = len({pte.ppage
+                  for se in eng_src.mmu._seqs.values()
+                  for pte in se.pages if not pte.on_host})
     report = migrate(src, dst, 0)
     after = _live_pages(eng_dst)
     assert set(after) == set(before)
     for key in before:
         np.testing.assert_array_equal(before[key]["k"], after[key]["k"])
         np.testing.assert_array_equal(before[key]["v"], after[key]["v"])
-    assert report.n_pages == len(before)
+    assert report.n_pages == n_phys <= len(before)
     assert report.payload_bytes > 0
     src.close()
     dst.close()
@@ -285,7 +290,7 @@ def test_snapshot_version_and_corruption_rejected(served):
     h2, a2 = decode_snapshot(blob)
     assert h2["geometry"] == eng.geometry()
     # version-mismatched state container
-    tampered = blob.replace(b'"state_version": 1', b'"state_version": 9', 1)
+    tampered = blob.replace(b'"state_version": 2', b'"state_version": 9', 1)
     with pytest.raises(BitstreamError, match="state version"):
         decode_snapshot(tampered)
     # wrong kind refuses before any state is touched

@@ -1,0 +1,121 @@
+"""Unit coverage for the MMU's set-associative TLB.
+
+The TLB was previously exercised only through one end-to-end property
+test; CoW remaps make stale-TLB bugs live (a shared page remapped by a
+copy-on-write fault MUST NOT keep serving the old translation), so the
+class gets direct coverage: insert/lookup, LRU eviction within a set,
+``invalidate(seq_id)`` scoping, and the hit-rate accounting.
+"""
+import pytest
+
+from repro.core.services.mmu import MMU, MMUConfig, TLB
+
+
+# ------------------------------------------------------- basic mapping ----
+def test_lookup_miss_then_insert_then_hit():
+    tlb = TLB(entries=16, assoc=4)
+    assert tlb.lookup(1, 0) is None
+    tlb.insert(1, 0, 7)
+    assert tlb.lookup(1, 0) == 7
+    assert (tlb.hits, tlb.misses) == (1, 1)
+
+
+def test_insert_same_key_updates_in_place():
+    tlb = TLB(entries=16, assoc=4)
+    tlb.insert(1, 0, 7)
+    tlb.insert(1, 0, 9)                    # remap (e.g. CoW moved the page)
+    assert tlb.lookup(1, 0) == 9
+    # update, not duplicate: one entry total across all sets
+    assert sum(len(s) for s in tlb._sets) == 1
+
+
+def test_distinct_keys_do_not_alias():
+    tlb = TLB(entries=64, assoc=4)
+    for sid in range(4):
+        for vp in range(4):
+            tlb.insert(sid, vp, sid * 100 + vp)
+    for sid in range(4):
+        for vp in range(4):
+            assert tlb.lookup(sid, vp) == sid * 100 + vp
+
+
+# --------------------------------------------------------- assoc / LRU ----
+def test_lru_eviction_within_a_set():
+    # entries == assoc -> a single set: insertion order is eviction order
+    tlb = TLB(entries=4, assoc=4)
+    for vp in range(4):
+        tlb.insert(1, vp, vp)
+    assert tlb.lookup(1, 0) == 0           # touch vp0: vp1 is now LRU
+    tlb.insert(1, 99, 99)                  # overflows the set
+    assert tlb.lookup(1, 1) is None        # LRU victim
+    assert tlb.lookup(1, 0) == 0           # recently-used survivor
+    assert tlb.lookup(1, 99) == 99
+
+
+def test_assoc_clamped_to_entries():
+    tlb = TLB(entries=2, assoc=8)
+    assert tlb.assoc == 2
+    assert tlb.n_sets == 1
+    tlb = TLB(entries=8, assoc=0)          # degenerate assoc -> direct-mapped
+    assert tlb.assoc == 1
+    assert tlb.n_sets == 8
+
+
+def test_capacity_never_exceeded():
+    tlb = TLB(entries=8, assoc=2)
+    for vp in range(64):
+        tlb.insert(3, vp, vp)
+    assert sum(len(s) for s in tlb._sets) <= 8
+    for s in tlb._sets:
+        assert len(s) <= tlb.assoc
+
+
+# ----------------------------------------------------------- invalidate ----
+def test_invalidate_scopes_to_one_sequence():
+    tlb = TLB(entries=32, assoc=4)
+    for vp in range(4):
+        tlb.insert(1, vp, vp)
+        tlb.insert(2, vp, 100 + vp)
+    n = tlb.invalidate(1)
+    assert n == 4
+    for vp in range(4):
+        assert tlb.lookup(1, vp) is None   # seq 1 fully dropped
+        assert tlb.lookup(2, vp) == 100 + vp   # seq 2 untouched
+
+
+def test_invalidate_missing_seq_is_noop():
+    tlb = TLB(entries=16, assoc=4)
+    tlb.insert(1, 0, 5)
+    assert tlb.invalidate(42) == 0
+    assert tlb.lookup(1, 0) == 5
+
+
+# -------------------------------------------------------------- hit rate ----
+def test_hit_rate_accounting():
+    tlb = TLB(entries=16, assoc=4)
+    assert tlb.hit_rate == 1.0             # no traffic yet
+    tlb.lookup(1, 0)                       # miss
+    tlb.insert(1, 0, 3)
+    tlb.lookup(1, 0)                       # hit
+    tlb.lookup(1, 0)                       # hit
+    assert tlb.hits == 2 and tlb.misses == 1
+    assert tlb.hit_rate == pytest.approx(2 / 3)
+
+
+# ------------------------------------------- integration: CoW remap path ----
+def test_cow_remap_invalidates_stale_translation():
+    """A copy-on-write fault remaps the faulting sequence's page; the TLB
+    must serve the NEW physical page immediately afterwards."""
+    mmu = MMU(MMUConfig(page_size=4, n_pages=16, host_pool_pages=16))
+    store = {}
+    mmu.register_pager(lambda pp: store.get(pp),
+                       lambda pp, d: store.__setitem__(pp, d), owner="t")
+    prompt = list(range(8))
+    mmu.alloc_seq(1, 8, prompt_tokens=prompt)
+    assert mmu.alloc_seq(2, 8, prompt_tokens=prompt) == 8
+    shared = mmu.translate(2, 0)[0]        # warms the TLB for (2, vpage 0)
+    new_pp = mmu.translate(2, 0, for_write=True)[0]
+    assert new_pp != shared
+    # post-CoW reads translate to the private copy, not the stale entry
+    assert mmu.translate(2, 0)[0] == new_pp
+    assert mmu.translate(1, 0)[0] == shared

@@ -1,0 +1,402 @@
+"""Copy-on-write prefix sharing in the paged MMU.
+
+Pins the refcounted-page contract end to end: content-keyed prefix
+index (alloc maps covered prompt pages onto existing physical pages),
+CoW on translate-for-write, group eviction/fault-back of shared pages
+with refcounted host payload lifecycle, snapshot/restore dedup, and —
+the acceptance bar — token-for-token parity between sharing-on and
+sharing-off engines (greedy AND seeded-sampled) across admission churn,
+eviction fault-back, and a mid-decode migration.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Shell, ShellConfig, migrate
+from repro.core.services import MMUConfig
+from repro.core.services.mmu import MMU, PageFaultError
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+
+PAGE = 16
+POOL = 128
+TEMPLATE = list(range(3, 3 + 3 * PAGE))       # 3 full shareable pages
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _mmu(n_pages=32, page=4, host=64, sharing=True):
+    return MMU(MMUConfig(page_size=page, n_pages=n_pages,
+                         host_pool_pages=host, prefix_sharing=sharing))
+
+
+def _fake_pager(mmu):
+    store = {}
+    mmu.register_pager(lambda pp: store.get(pp),
+                       lambda pp, d: store.__setitem__(pp, d), owner="t")
+    return store
+
+
+# ==================================================== refcount accounting ==
+def test_alloc_seq_shares_full_prompt_pages():
+    mmu = _mmu()
+    p = list(range(100, 118))                 # 4 full pages + 2 tokens
+    assert mmu.alloc_seq(1, len(p), prompt_tokens=p) == 0
+    assert mmu.utilization()["pages_used"] == 5
+    assert mmu.alloc_seq(2, len(p), prompt_tokens=p) == 16
+    u = mmu.utilization()
+    assert u["pages_used"] == 6               # 4 shared + 2 private partials
+    assert u["pages_shared"] == 4
+    assert u["shared_mappings"] == 4
+    assert u["prefix_hits"] == 4
+    # shared pages translate to the same physical page
+    for tok in (0, 5, 15):
+        assert mmu.translate(1, tok) == mmu.translate(2, tok)
+    # the partial tail is private
+    assert mmu.translate(1, 17) != mmu.translate(2, 17)
+
+
+def test_partial_prefix_shares_only_matching_pages():
+    mmu = _mmu()
+    p = list(range(40))
+    mmu.alloc_seq(1, len(p), prompt_tokens=p)
+    q = p[:8] + [999] * 32                    # diverges at page 2
+    assert mmu.alloc_seq(2, len(q), prompt_tokens=q) == 8
+    assert mmu.translate(1, 0) == mmu.translate(2, 0)
+    assert mmu.translate(1, 8) != mmu.translate(2, 8)
+
+
+def test_sharing_disabled_allocates_private_pages():
+    mmu = _mmu(sharing=False)
+    p = list(range(16))
+    assert mmu.alloc_seq(1, 16, prompt_tokens=p) == 0
+    assert mmu.alloc_seq(2, 16, prompt_tokens=p) == 0
+    assert mmu.probe_prefix(p) == 0
+    assert mmu.utilization()["pages_shared"] == 0
+    assert mmu.translate(1, 0) != mmu.translate(2, 0)
+
+
+def test_free_recycles_only_refcount_zero_pages():
+    mmu = _mmu()
+    p = list(range(12))
+    mmu.alloc_seq(1, 12, prompt_tokens=p)
+    mmu.alloc_seq(2, 12, prompt_tokens=p)
+    assert mmu.utilization()["pages_used"] == 3
+    mmu.free_seq(2)                           # sharer dies: pages survive
+    assert mmu.utilization()["pages_used"] == 3
+    assert mmu.translate(1, 0) is not None
+    mmu.free_seq(1)                           # last ref: everything recycles
+    assert mmu.utilization()["pages_used"] == 0
+    assert not mmu._ref and not mmu._prefix_index and not mmu._page_hash
+
+
+def test_probe_prefix_matches_alloc_coverage():
+    mmu = _mmu()
+    p = list(range(18))                       # 4 full pages + 2 tokens
+    assert mmu.probe_prefix(p) == 0           # nothing registered yet
+    mmu.alloc_seq(1, len(p), prompt_tokens=p)
+    assert mmu.probe_prefix(p) == 16
+    assert mmu.probe_prefix(p[:4] + [77] * 8) == 4
+    assert mmu.probe_prefix([77] * 12) == 0
+    assert mmu.alloc_seq(2, len(p), prompt_tokens=p) == 16
+
+
+# ========================================================== copy-on-write ==
+def test_translate_for_write_triggers_cow_and_preserves_sharer():
+    mmu = _mmu()
+    store = _fake_pager(mmu)
+    p = list(range(8))
+    mmu.alloc_seq(1, 8, prompt_tokens=p)
+    store[mmu.translate(1, 0)[0]] = "payload-A"
+    assert mmu.alloc_seq(2, 8, prompt_tokens=p) == 8
+    shared = mmu.translate(2, 0)[0]
+    new_pp, off = mmu.translate(2, 0, for_write=True)
+    assert new_pp != shared and off == 0
+    assert store[new_pp] == "payload-A"       # device-side page copy
+    assert mmu.translate(1, 0)[0] == shared   # sharer keeps the original
+    assert mmu.cow_faults == 1
+    u = mmu.utilization()
+    assert u["pages_shared"] == 1             # page 1 still shared
+    # writer's private copy is writable without further faults
+    assert mmu.translate(2, 0, for_write=True)[0] == new_pp
+    assert mmu.cow_faults == 1
+
+
+def test_translate_for_write_on_private_page_is_plain():
+    mmu = _mmu()
+    _fake_pager(mmu)
+    mmu.alloc_seq(1, 8, prompt_tokens=list(range(8)))
+    pp = mmu.translate(1, 0)[0]
+    assert mmu.translate(1, 0, for_write=True)[0] == pp
+    assert mmu.cow_faults == 0
+
+
+# ============================== shared eviction + pager lifecycle (sat. 2) ==
+def test_shared_evict_both_sequences_fault_back_exact_bytes():
+    mmu = _mmu(n_pages=3, page=4)
+    store = _fake_pager(mmu)
+    p = list(range(8))
+    mmu.alloc_seq(1, 8, prompt_tokens=p)
+    for pte in mmu._seqs[1].pages:
+        store[pte.ppage] = f"bytes-{pte.vpage}"
+    assert mmu.alloc_seq(2, 8, prompt_tokens=p) == 8
+    mmu.alloc_seq(9, 8)                       # pressure -> evicts shared
+    se1, se2 = mmu._seqs[1], mmu._seqs[2]
+    hosted = [pte.vpage for pte in se1.pages if pte.on_host]
+    assert hosted
+    for v in hosted:
+        # ONE host slot backs the whole sharing group
+        assert se2.pages[v].on_host
+        assert se2.pages[v].host_slot == se1.pages[v].host_slot
+        assert (mmu.host_page_data(1, v) == mmu.host_page_data(2, v)
+                == f"bytes-{v}")
+    mmu.free_seq(9)
+    v = hosted[0]
+    pp1 = mmu.translate(1, v * 4)[0]          # group fault-in
+    assert store[pp1] == f"bytes-{v}"
+    assert not se2.pages[v].on_host and se2.pages[v].ppage == pp1
+    assert mmu.translate(2, v * 4)[0] == pp1
+
+
+def test_host_payload_survives_until_last_reference_dies():
+    mmu = _mmu(n_pages=3, page=4)
+    store = _fake_pager(mmu)
+    p = list(range(8))
+    mmu.alloc_seq(1, 8, prompt_tokens=p)
+    for pte in mmu._seqs[1].pages:
+        store[pte.ppage] = f"pp-{pte.vpage}"
+    mmu.alloc_seq(2, 8, prompt_tokens=p)
+    mmu.alloc_seq(9, 8)                       # force shared eviction
+    hosted = [pte.vpage for pte in mmu._seqs[1].pages if pte.on_host]
+    assert hosted
+    v = hosted[0]
+    mmu.free_seq(1)                           # one sharer dies
+    assert mmu.host_page_data(2, v) == f"pp-{v}"   # payload retained
+    mmu.free_seq(9)
+    pp = mmu.translate(2, v * 4)[0]
+    assert store[pp] == f"pp-{v}"
+    mmu.free_seq(2)                           # last ref: host slot drained
+    assert mmu.utilization()["host_pages_used"] == 0
+
+
+# ==================================================== snapshot / restore ==
+def test_snapshot_restore_dedupes_and_reshares():
+    mmu = _mmu()
+    p = list(range(12))
+    mmu.alloc_seq(1, 12, prompt_tokens=p)
+    mmu.alloc_seq(2, 12, prompt_tokens=p)
+    snap = mmu.snapshot_seqs([1, 2])
+    dst = _mmu()
+    mapping = dst.restore_seqs(snap)
+    assert dst.utilization()["pages_used"] == 3    # not 6: sharing kept
+    assert dst.translate(1, 0) == dst.translate(2, 0)
+    # mapping agrees: both seqs' vpage 0 landed on one physical page
+    assert (mapping[1][0]["new_ppage"] == mapping[2][0]["new_ppage"])
+    # chain hashes were re-registered: a NEW sequence shares on the dst
+    assert dst.alloc_seq(3, 12, prompt_tokens=p) == 12
+
+
+def test_restore_capacity_check_counts_unique_pages():
+    mmu = _mmu()
+    p = list(range(16))
+    for sid in range(1, 5):
+        mmu.alloc_seq(sid, 16, prompt_tokens=p)
+    snap = mmu.snapshot_seqs([1, 2, 3, 4])
+    # 4 seqs x 4 pages = 16 mappings but only 4 physical pages: fits in
+    # a pool with exactly 4 free pages
+    dst = _mmu(n_pages=4)
+    dst.restore_seqs(snap)
+    assert dst.utilization()["pages_used"] == 4
+    tiny = _mmu(n_pages=3)
+    with pytest.raises(PageFaultError, match="upfront capacity"):
+        tiny.restore_seqs(snap)
+
+
+# =============================================== engine parity (tentpole) ==
+def _engine_pair(cfg, params, *, sharing, seed=11, n_pages=POOL,
+                 max_batch=4):
+    mmu = MMU(MMUConfig(page_size=PAGE, n_pages=n_pages,
+                        prefix_sharing=sharing))
+    return ServingEngine(cfg, params, mmu, max_batch=max_batch,
+                         max_len=128, seed=seed)
+
+
+def _churn_workload(eng, temp_cycle=(0.0, 0.0, 0.9, 0.0, 1.2)):
+    """Three admission waves of templated prompts, with an anchor request
+    keeping the shared prefix resident across waves."""
+    eng.submit(TEMPLATE + [300], max_new_tokens=40)       # anchor
+    outs = {}
+    uid = 0
+    for wave in range(3):
+        for k in range(3):
+            t = temp_cycle[(wave * 3 + k) % len(temp_cycle)]
+            eng.submit(TEMPLATE + [400 + uid], max_new_tokens=5,
+                       temperature=t)
+            uid += 1
+        for _ in range(8):
+            eng.step()
+    eng.run()
+    for r in eng.completed:
+        outs[tuple(r.prompt)] = list(r.out_tokens)
+    return outs
+
+
+def test_parity_sharing_on_vs_off_greedy_and_sampled_under_churn(served):
+    cfg, params = served
+    off = _engine_pair(cfg, params, sharing=False)
+    on = _engine_pair(cfg, params, sharing=True)
+    want = _churn_workload(off)
+    got = _churn_workload(on)
+    assert got == want
+    # and the sharing engine actually shared: prefill compute was skipped
+    assert on.prefill_skipped > 0
+    assert on.mmu.prefix_hits > 0
+    assert off.prefill_skipped == 0
+
+
+def test_parity_across_eviction_fault_back(served):
+    """Force-evict shared pages mid-decode, fault every page back, and
+    the remaining tokens must match a never-evicted engine — in both
+    sharing modes."""
+    cfg, params = served
+
+    def run(sharing, evict):
+        eng = _engine_pair(cfg, params, sharing=sharing, n_pages=24,
+                           max_batch=2)
+        eng.submit(TEMPLATE + [71], max_new_tokens=10, temperature=0.7)
+        eng.submit(TEMPLATE + [72], max_new_tokens=10)
+        for _ in range(3):
+            eng.step()
+        if evict:
+            mmu = eng.mmu
+            live = [r.rid for r in eng.slots if r is not None]
+            # dummy allocation large enough to force eviction of live KV
+            free = len(mmu._free)
+            mmu.alloc_seq(999, (free + 2) * PAGE)
+            assert any(pte.on_host for rid in live
+                       for pte in mmu._seqs[rid].pages), "no eviction?"
+            mmu.free_seq(999)
+            # fault everything back before the next step
+            for rid in live:
+                for pte in list(mmu._seqs[rid].pages):
+                    if pte.on_host:
+                        mmu.translate(rid, pte.vpage * PAGE)
+        eng.run()
+        return {tuple(r.prompt): list(r.out_tokens) for r in eng.completed}
+
+    oracle = run(False, evict=False)
+    assert run(False, evict=True) == oracle
+    assert run(True, evict=True) == oracle
+
+
+def test_parity_across_mid_decode_migration_with_dedup(served):
+    cfg, params = served
+
+    def shell():
+        s = Shell(ShellConfig.make(
+            services={"mmu": MMUConfig(page_size=PAGE, n_pages=POOL)},
+            n_vfpgas=2))
+        s.build()
+        return s
+
+    src, dst = shell(), shell()
+    eng_src = ServingEngine(cfg, params, src.services.get("mmu"),
+                            max_batch=3, max_len=128, shell=src, slot=0,
+                            tenant="gold")
+    eng_dst = ServingEngine(cfg, params, dst.services.get("mmu"),
+                            max_batch=3, max_len=128, shell=dst, slot=0,
+                            tenant="gold")
+    oracle = _engine_pair(cfg, params, sharing=False, seed=0, max_batch=3)
+    for temp, tag in ((0.0, 1), (0.0, 2), (1.1, 3)):
+        eng_src.submit(TEMPLATE + [tag], max_new_tokens=12,
+                       temperature=temp)
+        oracle.submit(TEMPLATE + [tag], max_new_tokens=12,
+                      temperature=temp)
+    for _ in range(4):
+        eng_src.step()
+        oracle.step()
+    src_used = src.services.get("mmu").utilization()["pages_used"]
+    assert src.services.get("mmu").utilization()["pages_shared"] > 0
+    report = migrate(src, dst, "gold")
+    assert report.n_requests == 3
+    # dedup on the wire AND on arrival: the destination pool pays the
+    # same page count the source did, not one page per (seq, vpage)
+    dst_u = dst.services.get("mmu").utilization()
+    assert dst_u["pages_used"] == src_used
+    assert dst_u["pages_shared"] > 0
+    assert report.n_pages == src_used
+    while eng_dst.pending():
+        eng_dst.step()
+    while oracle.pending():
+        oracle.step()
+    got = {tuple(r.prompt): r.out_tokens for r in eng_dst.completed}
+    want = {tuple(r.prompt): r.out_tokens for r in oracle.completed}
+    assert got == want
+    src.close()
+    dst.close()
+
+
+def test_snapshot_ships_each_shared_page_once(served):
+    cfg, params = served
+    eng = _engine_pair(cfg, params, sharing=True, max_batch=3)
+    for tag in (1, 2, 3):
+        eng.submit(TEMPLATE + [tag], max_new_tokens=8)
+    eng.step()
+    header, arrays = eng.snapshot_state()
+    shipped = [p["ppage"] for p in header["pages"]]
+    assert len(shipped) == len(set(shipped))
+    mappings = sum(len(sd["pages"]) for sd in header["mmu"]["seqs"])
+    assert len(shipped) < mappings            # dedup actually bites
+    assert arrays["kv_k"].shape[0] == eng.cfg.n_layers * len(shipped)
+
+
+# ========================================== capacity + prefill accounting ==
+def test_effective_capacity_at_least_2x_under_full_sharing(served):
+    """Fixed pool, templated traffic: the sharing engine concurrently
+    admits >= 2x the sequences the private engine can hold."""
+    cfg, params = served
+    pool = 12                                 # template needs 4+ pages/seq
+
+    def concurrent(sharing):
+        eng = _engine_pair(cfg, params, sharing=sharing, n_pages=pool,
+                           max_batch=8)
+        for tag in range(8):
+            eng.submit(TEMPLATE + [200 + tag], max_new_tokens=30)
+        eng.step()                            # one admission pass
+        return eng.active
+
+    base, shared = concurrent(False), concurrent(True)
+    assert shared >= 2 * base, (base, shared)
+
+
+def test_prefill_skip_accounting(served):
+    cfg, params = served
+    eng = _engine_pair(cfg, params, sharing=True, max_batch=2)
+    eng.submit(TEMPLATE + [41], max_new_tokens=2)
+    eng.submit(TEMPLATE + [42], max_new_tokens=2)
+    eng.run()
+    plen = len(TEMPLATE) + 1
+    # req 1 computes everything; req 2 only its uncovered suffix
+    assert eng.prefill_computed == plen + (plen - 3 * PAGE)
+    assert eng.prefill_skipped == 3 * PAGE
+    stats_keys = {"prefill_computed", "prefill_skipped"}
+    assert stats_keys <= set(eng.run().keys())
+
+
+# ========================================= config-aliasing satellite fix ==
+def test_default_constructed_services_do_not_share_config():
+    from repro.core.services.collectives import CollectiveService
+    from repro.core.services.compression import GradCompression
+    from repro.core.services.encryption import AESService
+    from repro.core.services.sniffer import TrafficSniffer
+    assert MMU().config is not MMU().config
+    for svc in (CollectiveService, GradCompression,
+                AESService, TrafficSniffer):
+        assert svc().config is not svc().config, svc.__name__
