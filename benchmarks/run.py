@@ -48,6 +48,8 @@ SUITES = [
      "Live tenant migration: downtime vs KV footprint + bystander p99"),
     ("prefix_sharing", "bench_prefix",
      "Prefix sharing: 90%-shared prefill cost + effective KV capacity"),
+    ("fault_storm", "bench_faults",
+     "Fault storm: recovery downtime + bystander p99"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
@@ -62,6 +64,7 @@ JSON_ARTIFACTS = {
     "multislot_lanes": ("BENCH_multislot.json", "bench_multislot"),
     "live_migrate": ("BENCH_migrate.json", "bench_migrate"),
     "prefix_sharing": ("BENCH_prefix.json", "bench_prefix"),
+    "fault_storm": ("BENCH_faults.json", "bench_faults"),
 }
 
 

@@ -25,6 +25,12 @@ fi
 # non-zero on any lost/dup/diverged completion)
 python examples/migrate_shell.py
 
+# smoke the self-healing demo (seeded IO fault + page-fault storm,
+# wedged slot detected by check_health and recovered KV-intact —
+# examples/fault_recovery.py exits non-zero unless the recovered
+# tenant matches a fault-free oracle token for token)
+python examples/fault_recovery.py
+
 # smoke the prefix-sharing demo (templated prompts on one engine:
 # asserts prefix hits, skipped prefill work, a CoW fault and >= 2x
 # admitted sequences vs the private-page baseline; exits non-zero if
@@ -36,7 +42,7 @@ python examples/prefix_sharing.py
 # kernel_microbench, multislot_lanes and live_migrate write their
 # BENCH_*.json artifacts
 python -m benchmarks.run \
-  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing
+  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm
 
 # Gated trend check: diff fresh artifacts against the previous PR's
 # committed versions (git show HEAD:..., falling back to
@@ -72,10 +78,17 @@ python scripts/diff_bench.py BENCH_migrate.json   --warn-pct 200 "${STRICT[@]}"
 # cells +-70% under host load — 100% floor clears the noise while still
 # flagging a collapse of the speedup toward the asserted 2x minimum.
 python scripts/diff_bench.py BENCH_prefix.json    --warn-pct 100 "${STRICT[@]}"
+# faults: correctness (token parity vs a fault-free oracle, zero
+# lost/dup completions, recoveries == rounds) is HARD-ASSERTED inside
+# bench_faults.run(); the trend rows are ms-scale recovery downtime and
+# bystander p99, both as host-load sensitive as the migrate suite
+# (measured: recovery p99 ~240-260ms, bystander p99 0.3-3ms depending
+# on storm overlap) — 200% floor = order-of-magnitude guard only
+python scripts/diff_bench.py BENCH_faults.json    --warn-pct 200 "${STRICT[@]}"
 
 # record this run in the history store (keyed by commit+suite+config;
 # re-runs on the same commit replace, never duplicate), keeping the
 # last ~50 commits of history
 python scripts/bench_history.py append BENCH_serving.json \
   BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json \
-  BENCH_migrate.json BENCH_prefix.json --prune 50
+  BENCH_migrate.json BENCH_prefix.json BENCH_faults.json --prune 50

@@ -5,10 +5,15 @@ Static layer (never reconfigured) / dynamic layer (reconfigurable services)
 sharing, run-time reconfiguration, and a unified multi-stream interface.
 """
 from repro.core.cthread import Alloc, CThread
+from repro.core.faults import (FaultKind, FaultPlan, FaultSpec,
+                               InjectedFault)
+from repro.core.health import HealthMonitor, Watchdog
 from repro.core.interfaces import (AppInterface, Completion, Oper, SgEntry)
-from repro.core.migrate import (MigrationError, MigrationReport, migrate)
-from repro.core.port import (Invocation, Port, PortCapabilities, PortFuture,
-                             PortState, ServicePort, VFpgaPort)
+from repro.core.migrate import (MigrationError, MigrationReport,
+                                RecoveryReport, migrate,
+                                recover_tenant_local)
+from repro.core.port import (Invocation, Port, PortCapabilities, PortError,
+                             PortFuture, PortState, ServicePort, VFpgaPort)
 from repro.core.scheduler import ShellScheduler, Tenant
 from repro.core.shell import BuildReport, Shell, ShellConfig
 from repro.core.static_layer import StaticLayer, TransferEngine
@@ -16,9 +21,12 @@ from repro.core.vfpga import AppArtifact, VFpga
 
 __all__ = [
     "Alloc", "CThread", "AppInterface", "Completion", "Oper", "SgEntry",
-    "Invocation", "Port", "PortCapabilities", "PortFuture", "PortState",
-    "ServicePort", "VFpgaPort",
+    "Invocation", "Port", "PortCapabilities", "PortError", "PortFuture",
+    "PortState", "ServicePort", "VFpgaPort",
+    "FaultKind", "FaultPlan", "FaultSpec", "InjectedFault",
+    "HealthMonitor", "Watchdog",
     "BuildReport", "Shell", "ShellConfig", "ShellScheduler", "StaticLayer",
     "Tenant", "TransferEngine", "AppArtifact", "VFpga",
-    "MigrationError", "MigrationReport", "migrate",
+    "MigrationError", "MigrationReport", "RecoveryReport", "migrate",
+    "recover_tenant_local",
 ]

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import bitstream as B
 from repro.core.bitstream import BitstreamError
+from repro.core.faults import FaultKind, maybe_fire
 
 # Bumped whenever the migration header/array layout changes; a snapshot
 # from a different version is refused (BitstreamError), never guessed at.
@@ -162,6 +163,18 @@ def _restore_port_state(shell, slot: int, header: Dict[str, Any],
     vf._next_vaddr = max(vf._next_vaddr, nv)
 
 
+def _record_migration_fault(shell, exc: BaseException, *, slot: int,
+                            tenant: Optional[str], stage: str) -> None:
+    """Account a failed migration stage in the source shell's health
+    ledger (the source keeps serving; the fault is informational)."""
+    health = getattr(shell, "health", None)
+    if health is not None:
+        health.record_fault(
+            getattr(exc, "kind", FaultKind.MIGRATION_FAIL), slot=slot,
+            tenant=tenant, site=f"migrate.{stage}", strike=False,
+            msg=str(exc))
+
+
 # ------------------------------------------------------------ pipeline -----
 def _resolve_slot(shell, target: Union[int, str]) -> int:
     if isinstance(target, int):
@@ -241,9 +254,13 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
 
     # -- 2. snapshot (device KV gather + container round-trip) --------------
     try:
+        maybe_fire(getattr(src_shell, "faults", None), "migrate.snapshot",
+                   slot=slot, tenant=tenant)
         header, arrays = snapshot_tenant(src_shell, slot)
         blob = encode_snapshot(header, arrays)
-    except BaseException:
+    except BaseException as e:
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="snapshot")
         src_port.resume()
         raise
     t_s = time.perf_counter()
@@ -254,12 +271,16 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
     prev_tenant = dst_shell.vfpgas[dslot].tenant
     dst_port = dst_shell.attach(dslot, tenant=tenant)
     try:
+        maybe_fire(getattr(src_shell, "faults", None), "migrate.restore",
+                   slot=slot, tenant=tenant)
         rheader, rarrays = decode_snapshot(blob)
         stats = dst_engine.restore_state(rheader, rarrays)
         _restore_port_state(dst_shell, dslot, rheader, rarrays)
     except Exception as e:  # noqa: BLE001 — ANY restore failure (bad
         # container, geometry/capacity refusal, id collision) must leave
         # the source serving; nothing was freed there yet
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="restore")
         if prev_tenant is not None and prev_tenant != tenant:
             dst_shell.attach(dslot, tenant=prev_tenant)   # rebind back
         src_port.resume()
@@ -271,6 +292,8 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
     pending = list(src_port.take_held())
     replayed = 0
     try:
+        maybe_fire(getattr(src_shell, "faults", None), "migrate.replay",
+                   slot=slot, tenant=tenant)
         # one at a time, so a mid-list failure knows EXACTLY which
         # invocations the destination consumed (dispatched or joined its
         # held FIFO) and which it never touched
@@ -283,6 +306,8 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
         # the invocations the destination never touched re-hold at the
         # source (re-ticketed) and replay there on resume — exactly
         # once either way, nothing wedged QUIESCED.
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="replay")
         src_port.restore_held(pending)
         src_port.resume()
         raise MigrationError(
@@ -300,4 +325,114 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
         replayed=replayed,
         quiesce_s=t_q - t0, snapshot_s=t_s - t_q,
         restore_s=t_r - t_s, replay_s=t_done - t_r,
+        downtime_s=t_done - t0)
+
+
+# --------------------------------------------------- local slot recovery ----
+@dataclass
+class RecoveryReport:
+    """What one :func:`recover_tenant_local` did and what it cost.
+    ``downtime_s`` is intake-hold to held-invocation replay completing —
+    the recovered tenant's observed service gap."""
+    slot: int
+    tenant: Optional[str]
+    n_requests: int          # in-flight requests restored
+    n_queued: int            # queued requests restored
+    n_pages: int             # KV pages preserved across the restart
+    payload_bytes: int       # encoded snapshot container size
+    failed_inflight: int     # wedged in-flight invocations force-failed
+    replayed: int            # held invocations replayed after recovery
+    quiesce_s: float
+    snapshot_s: float
+    restart_s: float
+    restore_s: float
+    downtime_s: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+def recover_tenant_local(shell, slot: int, *,
+                         drain_timeout: float = 5.0) -> RecoveryReport:
+    """Self-healing restart of ONE slot on ONE shell — the watchdog's
+    recovery verb (``Shell.recover_slot`` wraps it).
+
+    The local reuse of the migration container: quiesce the slot's port
+    (a wedged in-flight tail that cannot complete is force-failed with
+    typed errors, held submissions are kept), snapshot the tenant's
+    paged state through the same versioned ``CYBS`` container a
+    cross-shell move uses, cold-reset the engine's device soft state
+    (fresh block-table view, zeroed decode vectors, TLB flush — the
+    "restart"), then restore from the container: fresh page allocation,
+    KV payloads (device gather + refcounted host payloads) scattered
+    back, decode state and PRNG re-adopted.  Held invocations replay on
+    resume.  Decoding then continues token-for-token where it left off —
+    the KV pages survived the restart.
+    """
+    engine = shell.engines.get(slot)
+    if engine is None:
+        raise MigrationError(
+            f"no serving engine bound to slot {slot}; recover_tenant_local "
+            "only heals paged serving tenants (ServingEngine, shell=...)")
+    tenant = engine.tenant or shell.vfpgas[slot].tenant
+    port = shell.attach(slot)
+
+    t0 = time.perf_counter()
+    # -- 1. quiesce; a wedged tail may never complete: force-fail it -------
+    failed = 0
+    if not port.quiesce(timeout=drain_timeout, resume_on_timeout=False):
+        failed = port.fail_inflight()
+        if not port.quiesce(timeout=drain_timeout,
+                            resume_on_timeout=False):
+            port.resume()
+            raise MigrationError(
+                f"slot {slot} would not quiesce even after force-failing "
+                f"{failed} in-flight invocation(s); recovery aborted, "
+                "intake resumed")
+    if tenant is not None:
+        shell.scheduler.drain_tenant(tenant, timeout=drain_timeout)
+    engine.flush_io(timeout=drain_timeout)
+    t_q = time.perf_counter()
+
+    # -- 2. snapshot through the migration container ------------------------
+    try:
+        header, arrays = snapshot_tenant(shell, slot)
+        blob = encode_snapshot(header, arrays)
+    except BaseException as e:
+        _record_migration_fault(shell, e, slot=slot, tenant=tenant,
+                                stage="snapshot")
+        port.resume()
+        raise
+    t_s = time.perf_counter()
+
+    # -- 3. the "restart": evacuate + cold-reset device soft state ----------
+    engine.evacuate()
+    engine.reset_decode_state()
+    t_restart = time.perf_counter()
+
+    # -- 4. restore from the container, replay held work --------------------
+    try:
+        rheader, rarrays = decode_snapshot(blob)
+        stats = engine.restore_state(rheader, rarrays)
+        _restore_port_state(shell, slot, rheader, rarrays)
+    except Exception as e:  # noqa: BLE001 — the engine is already reset;
+        # resume so held work fails/replays against the empty engine
+        # rather than wedging, and surface the loss loudly
+        _record_migration_fault(shell, e, slot=slot, tenant=tenant,
+                                stage="restore")
+        port.resume()
+        raise MigrationError(
+            f"local restore failed on slot {slot}: {e} (the tenant's "
+            "state is intact in the snapshot container, but the live "
+            "engine was reset)") from e
+    replayed = port.resume()
+    t_done = time.perf_counter()
+
+    return RecoveryReport(
+        slot=slot, tenant=tenant,
+        n_requests=stats["requests"], n_queued=stats["queued"],
+        n_pages=stats["pages"], payload_bytes=len(blob),
+        failed_inflight=failed, replayed=replayed,
+        quiesce_s=t_q - t0, snapshot_s=t_s - t_q,
+        restart_s=t_restart - t_s, restore_s=t_done - t_restart,
         downtime_s=t_done - t0)

@@ -37,6 +37,7 @@ from dataclasses import asdict, dataclass, field
 from enum import Enum
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
+from repro.core.faults import FaultKind, InjectedFault
 from repro.core.interfaces import Completion, Oper, SgEntry
 from repro.core.scheduler import SHARED_LANE_SLOT_BASE
 
@@ -110,6 +111,17 @@ class Invocation:
     deadline_s: Optional[float] = None      # relative SLO (seconds)
     meta: Dict[str, Any] = field(default_factory=dict)
     ticket: int = -1                        # assigned by the port
+    # Retry/backoff policy for RETRYABLE faults (lane crash, IO error,
+    # pager failure...): up to ``max_retries`` re-dispatches, each
+    # preceded by ``retry_backoff_s * 2**attempt`` of backoff, and never
+    # past the invocation's absolute deadline (``deadline_s`` measured
+    # from first acceptance).  Default 0: faults surface immediately —
+    # existing Completion(ok=False) semantics are unchanged unless a
+    # caller opts in.
+    max_retries: int = 0
+    retry_backoff_s: float = 0.0
+    retries: int = 0                        # attempts consumed (runtime)
+    t_accept: float = 0.0                   # first-submit time (runtime)
 
     @classmethod
     def from_sg(cls, sg: SgEntry, *, priority: int = 0,
@@ -161,7 +173,27 @@ class PortFuture(Future):
 
 
 class PortError(RuntimeError):
-    pass
+    """Structured port failure: WHAT failed (``kind``, a
+    :class:`~repro.core.faults.FaultKind` value), WHERE (``slot``,
+    ``tenant``), and whether a re-dispatch could succeed (``retryable``).
+    Message-only construction stays valid for generic refusals
+    (closed port, disallowed method)."""
+
+    def __init__(self, message: str, *, kind: Any = "error",
+                 slot: Optional[int] = None, tenant: Optional[str] = None,
+                 retryable: bool = False,
+                 cause: Optional[BaseException] = None):
+        super().__init__(message)
+        self.kind = kind.value if isinstance(kind, FaultKind) else str(kind)
+        self.slot = slot
+        self.tenant = tenant
+        self.retryable = retryable
+        self.cause = cause
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "slot": self.slot,
+                "tenant": self.tenant, "retryable": self.retryable,
+                "message": str(self)}
 
 
 class Port:
@@ -182,6 +214,8 @@ class Port:
         self._held: List[Tuple[Invocation, PortFuture]] = []
         self.submitted = 0
         self.completed = 0
+        self.failed = 0                   # futures failed with PortError
+        self.retried = 0                  # retryable-fault re-dispatches
         self.replayed = 0
         self.held_peak = 0
         self._closed = False
@@ -200,6 +234,19 @@ class Port:
         resolves after the swap.
         """
         fut = PortFuture(inv)
+        slot, default_tenant = self._fault_ctx()
+        tenant = inv.tenant or default_tenant
+        health = self._health()
+        if health is not None and health.is_quarantined(tenant):
+            # graceful degradation: a repeatedly-faulting tenant is
+            # rejected FAST with a typed error — bystanders keep flowing
+            health.record_rejection(tenant)
+            raise PortError(
+                f"tenant {tenant!r} is quarantined on port {self.name!r} "
+                "(repeated faults within the quarantine window); "
+                "Shell.health.unquarantine() to lift",
+                kind=FaultKind.QUARANTINED, slot=slot, tenant=tenant,
+                retryable=False)
         with self._lock:
             if self._closed:
                 raise PortError(
@@ -208,13 +255,15 @@ class Port:
                     "Shell.attach() for a live port")
             if inv.ticket < 0:
                 inv.ticket = next(self._tickets)
+            if inv.t_accept == 0.0:
+                inv.t_accept = time.perf_counter()
             self.submitted += 1
             if self._state is not PortState.ACTIVE:
                 self._held.append((inv, fut))
                 self.held_peak = max(self.held_peak, len(self._held))
                 return fut
             self._inflight[inv.ticket] = fut
-        self._dispatch(inv, fut)
+        self._safe_dispatch(inv, fut)
         return fut
 
     def call(self, inv: Invocation,
@@ -226,12 +275,140 @@ class Port:
     # ------------------------------------------------------- completion ----
     def _finish(self, inv: Invocation, fut: PortFuture,
                 comp: Completion) -> None:
+        if (not comp.ok and isinstance(comp.result, BaseException)
+                and self._should_retry(inv, comp.result)):
+            # a retryable fault surfaced as a failed Completion (lane
+            # crash, injected service fault): consume one retry and
+            # re-dispatch the SAME invocation instead of resolving
+            self._requeue_retry(inv, fut)
+            return
         with self._lock:
             self._inflight.pop(inv.ticket, None)
             self.completed += 1
             self._cv.notify_all()
         if not fut.done():               # a future resolves exactly once
             fut.set_result(comp)
+
+    # ---------------------------------------------- typed failure path -----
+    def _safe_dispatch(self, inv: Invocation, fut: PortFuture) -> None:
+        """Dispatch with a finally-safe failure path: ANY exception out
+        of the datapath (including an injected ``port.dispatch`` fault)
+        fails the future with a structured :class:`PortError` instead of
+        leaving it unresolved forever."""
+        try:
+            plan = self._fault_plan()
+            if plan is not None:
+                slot, default_tenant = self._fault_ctx()
+                plan.fire("port.dispatch", slot=slot,
+                          tenant=inv.tenant or default_tenant,
+                          ticket=inv.ticket)
+            self._dispatch(inv, fut)
+        except BaseException as e:  # noqa: BLE001 — the future IS the
+            self._fail(inv, fut, e)  # error channel; nothing may hang
+
+    def _as_port_error(self, inv: Invocation,
+                       exc: BaseException) -> PortError:
+        slot, default_tenant = self._fault_ctx()
+        tenant = inv.tenant or default_tenant
+        if isinstance(exc, PortError):
+            return exc
+        kind = getattr(exc, "kind", FaultKind.DISPATCH)
+        retryable = bool(getattr(exc, "retryable", False))
+        return PortError(
+            f"invocation {inv.ticket} on port {self.name!r} failed: "
+            f"{exc}", kind=kind, slot=slot, tenant=tenant,
+            retryable=retryable, cause=exc)
+
+    def _fail(self, inv: Invocation, fut: PortFuture,
+              exc: BaseException) -> None:
+        """Fail one in-flight invocation with a typed error — after the
+        retry policy declines it.  Pops in-flight tracking (quiesce
+        waiters see it leave) and records the fault in the shell's
+        health ledger when one is attached."""
+        err = self._as_port_error(inv, exc)
+        if self._should_retry(inv, err):
+            self._requeue_retry(inv, fut)
+            return
+        health = self._health()
+        if health is not None:
+            health.record_fault(err.kind, slot=err.slot, tenant=err.tenant,
+                                site=getattr(exc, "site", ""),
+                                msg=str(err))
+        with self._lock:
+            self._inflight.pop(inv.ticket, None)
+            self.failed += 1
+            self._cv.notify_all()
+        if not fut.done():
+            fut.set_exception(err)
+
+    def _should_retry(self, inv: Invocation, exc: BaseException) -> bool:
+        if inv.retries >= inv.max_retries:
+            return False
+        if not getattr(exc, "retryable", False):
+            return False
+        if self._closed:
+            return False
+        if inv.deadline_s is not None and inv.t_accept > 0.0:
+            # deadline-aware: a retry that cannot finish before the SLO
+            # deadline is not attempted (backoff counts against it)
+            backoff = inv.retry_backoff_s * (2 ** inv.retries)
+            if (time.perf_counter() + backoff
+                    > inv.t_accept + inv.deadline_s):
+                return False
+        return True
+
+    def _requeue_retry(self, inv: Invocation, fut: PortFuture) -> None:
+        """Consume one retry and re-dispatch the SAME invocation (same
+        ticket, same future).  Runs on whatever thread surfaced the
+        fault; the bounded exponential backoff sleeps there."""
+        backoff = inv.retry_backoff_s * (2 ** inv.retries)
+        inv.retries += 1
+        with self._lock:
+            self.retried += 1
+        if backoff > 0:
+            time.sleep(min(backoff, 1.0))
+        with self._lock:
+            if self._closed:
+                self._inflight.pop(inv.ticket, None)
+                self.failed += 1
+                self._cv.notify_all()
+                if not fut.done():
+                    fut.set_exception(PortError(
+                        f"port {self.name!r} closed during retry of "
+                        f"invocation {inv.ticket}",
+                        kind=FaultKind.DISPATCH, retryable=False))
+                return
+            if self._state is not PortState.ACTIVE:
+                # port started draining between fault and retry: the
+                # invocation re-holds and replays on resume()
+                self._inflight.pop(inv.ticket, None)
+                self._held.append((inv, fut))
+                self.held_peak = max(self.held_peak, len(self._held))
+                self._cv.notify_all()
+                return
+            self._inflight[inv.ticket] = fut
+        self._safe_dispatch(inv, fut)
+
+    def fail_inflight(self, exc: Optional[BaseException] = None) -> int:
+        """Force-fail every in-flight invocation with a typed error — the
+        recovery path for a WEDGED slot whose completions will never
+        arrive (its lane died or its logic hung).  Returns how many
+        futures were failed; held invocations are untouched (they replay
+        after recovery)."""
+        with self._lock:
+            futs = list(self._inflight.items())
+            self._inflight.clear()
+            self.failed += len(futs)
+            self._cv.notify_all()
+        slot, tenant = self._fault_ctx()
+        base = exc or PortError(
+            f"port {self.name!r}: in-flight work force-failed during "
+            "slot recovery", kind=FaultKind.WEDGE, slot=slot,
+            tenant=tenant, retryable=False)
+        for _ticket, fut in futs:
+            if not fut.done():
+                fut.set_exception(base)
+        return len(futs)
 
     def close(self) -> None:
         """Permanently invalidate the port (its backing slot/service is
@@ -255,15 +432,23 @@ class Port:
             return len(self._held)
 
     # ------------------------------------------------- drain / hot-swap ----
-    def quiesce(self, timeout: Optional[float] = 30.0) -> bool:
+    def quiesce(self, timeout: Optional[float] = 30.0, *,
+                resume_on_timeout: bool = True) -> bool:
         """Stop intake and wait for every in-flight completion.
 
         Idempotent; returns True once the port is QUIESCED.  On timeout
-        the port stays DRAINING (intake still held) and False is
-        returned — the caller decides whether to resume or abort.
+        False is returned and — by default — intake is REOPENED
+        (``resume()``: held submissions replay, the port is ACTIVE
+        again), so a failed drain can never leave the port wedged
+        DRAINING with its intake silently held.  The timeout is also
+        recorded as a health event when a monitor is attached.
+        ``resume_on_timeout=False`` restores the old contract for
+        callers that take over recovery themselves (e.g.
+        ``recover_tenant_local`` force-fails the stuck tail instead).
         """
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
+        timed_out = False
         with self._lock:
             if self._state is PortState.QUIESCED and not self._inflight:
                 return True
@@ -272,10 +457,23 @@ class Port:
                 remaining = (None if deadline is None
                              else deadline - time.perf_counter())
                 if remaining is not None and remaining <= 0:
-                    return False
+                    timed_out = True
+                    break
                 self._cv.wait(timeout=remaining if remaining else 0.25)
-            self._state = PortState.QUIESCED
-            return True
+            if not timed_out:
+                self._state = PortState.QUIESCED
+                return True
+        # timeout path, outside the lock (resume() re-takes it)
+        health = self._health()
+        if health is not None:
+            slot, tenant = self._fault_ctx()
+            health.record_fault(FaultKind.QUIESCE_TIMEOUT, slot=slot,
+                                tenant=tenant, strike=False,
+                                msg=f"port {self.name!r} quiesce timed "
+                                    f"out with {self.inflight()} in flight")
+        if resume_on_timeout:
+            self.resume()
+        return False
 
     def resume(self) -> int:
         """Replay held invocations in FIFO order, then reopen intake.
@@ -298,7 +496,7 @@ class Port:
             for inv, fut in held:
                 self.replayed += 1
                 replayed += 1
-                self._dispatch(inv, fut)
+                self._safe_dispatch(inv, fut)
 
     def take_held(self) -> List[Tuple[Invocation, PortFuture]]:
         """Detach the held FIFO for replay on ANOTHER port — the
@@ -353,13 +551,26 @@ class Port:
                     continue
                 self._inflight[inv.ticket] = fut
                 self.replayed += 1
-            self._dispatch(inv, fut)
+            self._safe_dispatch(inv, fut)
             n += 1
         return n
 
     # ------------------------------------------------------------ hooks ----
     def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
         raise NotImplementedError
+
+    def _fault_ctx(self) -> Tuple[Optional[int], Optional[str]]:
+        """(slot, default tenant) for typed errors and health records."""
+        return None, None
+
+    def _fault_plan(self):
+        """The attached :class:`~repro.core.faults.FaultPlan`, if any."""
+        return None
+
+    def _health(self):
+        """The shell's :class:`~repro.core.health.HealthMonitor`, if
+        this port is shell-bound."""
+        return None
 
     def capabilities(self) -> PortCapabilities:
         raise NotImplementedError
@@ -376,6 +587,8 @@ class Port:
                 "state": self._state.value,
                 "submitted": self.submitted,
                 "completed": self.completed,
+                "failed": self.failed,
+                "retried": self.retried,
                 "inflight": len(self._inflight),
                 "held": len(self._held),
                 "replayed": self.replayed,
@@ -392,6 +605,18 @@ class VFpgaPort(Port):
     def __init__(self, vfpga: Any):
         super().__init__(f"vfpga{vfpga.slot}")
         self.vfpga = vfpga
+
+    # ------------------------------------------------------ fault wiring ---
+    def _fault_ctx(self) -> Tuple[Optional[int], Optional[str]]:
+        return self.vfpga.slot, getattr(self.vfpga, "tenant", None)
+
+    def _fault_plan(self):
+        shell = getattr(self.vfpga, "shell", None)
+        return getattr(shell, "faults", None)
+
+    def _health(self):
+        shell = getattr(self.vfpga, "shell", None)
+        return getattr(shell, "health", None)
 
     # ---------------------------------------------------------- dispatch ---
     def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
@@ -420,11 +645,19 @@ class VFpgaPort(Port):
     def _dispatch_io(self, inv: Invocation, fut: PortFuture, shell) -> None:
         t0 = time.perf_counter()
 
-        def done(inv=inv, fut=fut, t0=t0) -> None:
+        def done(err: Optional[BaseException] = None,
+                 inv=inv, fut=fut, t0=t0) -> None:
+            if err is not None:
+                self._fail(inv, fut, err)
+                return
             self._finish(inv, fut, Completion(
                 ticket=inv.ticket, tid=inv.tid, opcode=Oper.LOCAL_TRANSFER,
                 nbytes=inv.nbytes, t_submit=t0,
                 t_done=time.perf_counter()))
+
+        # the scheduler probes this before passing an IO error into the
+        # callback (legacy on_done callbacks are zero-arg)
+        done.accepts_error = True
 
         if shell is None:
             done()
@@ -497,6 +730,16 @@ class ServicePort(Port):
         self.slot = slot
         self.tenant = tenant or f"svc.{service.NAME}"
 
+    # ------------------------------------------------------ fault wiring ---
+    def _fault_ctx(self) -> Tuple[Optional[int], Optional[str]]:
+        return self.slot, self.tenant
+
+    def _fault_plan(self):
+        return getattr(self.shell, "faults", None)
+
+    def _health(self):
+        return getattr(self.shell, "health", None)
+
     def _dispatch(self, inv: Invocation, fut: PortFuture) -> None:
         svc = self.service
         allowed = getattr(svc, "PORT_METHODS", ())
@@ -517,6 +760,11 @@ class ServicePort(Port):
             t0 = time.perf_counter()
             ok, result = True, None
             try:
+                plan = self._fault_plan()
+                if plan is not None:
+                    plan.fire("service.call", slot=self.slot,
+                              tenant=inv.tenant or self.tenant,
+                              method=inv.method)
                 result = getattr(svc, inv.method)(*inv.args, **inv.kwargs)
             except Exception as e:    # noqa: BLE001 — fault -> completion
                 ok, result = False, e

@@ -49,6 +49,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.core import credits as C
+from repro.core.faults import FaultKind
 from repro.core.interfaces import Completion, SgEntry
 
 DEFAULT_TENANT_PREFIX = "tenant"
@@ -340,6 +341,12 @@ class ShellScheduler:
 
         self.batches_issued = 0
         self.entries_coalesced = 0          # entries that rode in a batch >1
+        # robustness wiring (set by Shell.set_fault_plan / Shell.__init__):
+        # an armed FaultPlan probed at "lane.execute"/"io.complete", and the
+        # HealthMonitor that lane heartbeats + fault records feed.
+        self.faults: Optional[Any] = None
+        self.health: Optional[Any] = None
+        self.lane_faults = 0                # execute/io bodies that raised
 
     # ------------------------------------------------------------ tenants --
     def register_tenant(self, name: str, weight: float = 1.0) -> Tenant:
@@ -476,6 +483,12 @@ class ShellScheduler:
             # totals and arbiter totals stay reconciled.  Lanes-on and
             # lanes-off take the same path here, so billed totals are
             # identical in both modes.
+            if self.faults is not None:
+                # same injection site as the queued path; raises BEFORE
+                # any accounting mutates, so the caller's typed-failure
+                # path (Port._safe_dispatch) sees a clean state
+                self.faults.fire("io.complete", slot=slot,
+                                 tenant=ten.name, tag=tag)
             t_sub = time.perf_counter()
             requester = f"{ten.name}/vfpga{slot}.s{stream}:inline"
             with self._lock:
@@ -759,33 +772,84 @@ class ShellScheduler:
     def _execute_batch(self, batch: _Batch, credit_cost: int) -> None:
         """Execute each SG in submission order, complete CQs, release
         credits, update tenant QoS counters.  Runs on a lane thread
-        (lanes on) or the scheduler worker (lanes off / pure I/O)."""
+        (lanes on) or the scheduler worker (lanes off / pure I/O).
+
+        Failure-hardened: an exception out of an execute body (app bug or
+        injected ``lane.execute``/``io.complete`` fault) is converted into
+        a failed ``Completion`` (SG work) or an error callback (IO work)
+        for THAT submission only — the rest of the batch still completes,
+        and the ``finally`` block guarantees credits are released and
+        tenant accounting settles even on the worst path, so a crash can
+        never leak credits or wedge ``drain()`` waiters forever."""
         ten = batch.tenant
-        for sub in batch.subs:
-            if sub.execute is not None:
-                comp = sub.execute(sub.ticket, sub.sg)
-                if sub.complete is not None:
-                    sub.complete(comp)
-            if sub.done_event is not None:
-                sub.done_event.set()
-            if sub.on_done is not None:
-                try:
-                    sub.on_done()
-                except Exception:   # noqa: BLE001 — a bad callback must
-                    pass            # never kill an executor thread
-        now = time.perf_counter()
-        ten.credits.release(credit_cost)
-        with self._lock:
+        plan = self.faults
+        try:
             for sub in batch.subs:
-                ten.completions += 1
-                ten.lat_sum_s += now - sub.t_submit
-            ten.batches += 1
-            ten.bytes_done += batch.nbytes
-            ten.t_last_done = now
-            ten.pending -= len(batch.subs)
-            self._inflight -= len(batch.subs)
-            # wakes both drain() waiters and back-pressured submitters
-            self._idle_cv.notify_all()
+                err: Optional[BaseException] = None
+                comp: Optional[Completion] = None
+                try:
+                    if plan is not None:
+                        plan.fire("lane.execute" if sub.execute is not None
+                                  else "io.complete",
+                                  slot=sub.slot, tenant=ten.name,
+                                  ticket=sub.ticket)
+                    if sub.execute is not None:
+                        comp = sub.execute(sub.ticket, sub.sg)
+                except BaseException as e:  # noqa: BLE001 — the lane
+                    # must outlive anything the body throws
+                    err = e
+                    self.lane_faults += 1
+                if err is not None and sub.execute is not None:
+                    # the SG path already speaks failed Completions
+                    # (service rejections, app exceptions): deliver the
+                    # typed fault the same way so the Port layer's retry
+                    # policy can intercept it in _finish
+                    if self.health is not None:
+                        self.health.record_fault(
+                            getattr(err, "kind", FaultKind.LANE_CRASH),
+                            slot=sub.slot, tenant=ten.name,
+                            site=getattr(err, "site", "lane.execute"),
+                            msg=str(err))
+                    comp = Completion(
+                        ticket=sub.ticket, tid=sub.sg.tid,
+                        opcode=sub.sg.opcode, nbytes=sub.nbytes,
+                        t_submit=sub.t_submit,
+                        t_done=time.perf_counter(), ok=False, result=err)
+                if sub.complete is not None and comp is not None:
+                    try:
+                        sub.complete(comp)
+                    except Exception:  # noqa: BLE001 — a bad completion
+                        pass           # callback must not kill the lane
+                if sub.done_event is not None:
+                    sub.done_event.set()
+                if sub.on_done is not None:
+                    try:
+                        if (err is not None and getattr(
+                                sub.on_done, "accepts_error", False)):
+                            # Port-layer IO callback: the error fails the
+                            # future typed (and is health-recorded there)
+                            sub.on_done(err)
+                        else:
+                            sub.on_done()
+                    except Exception:   # noqa: BLE001 — a bad callback
+                        pass            # must never kill the thread
+        finally:
+            now = time.perf_counter()
+            ten.credits.release(credit_cost)
+            with self._lock:
+                for sub in batch.subs:
+                    ten.completions += 1
+                    ten.lat_sum_s += now - sub.t_submit
+                ten.batches += 1
+                ten.bytes_done += batch.nbytes
+                ten.t_last_done = now
+                ten.pending -= len(batch.subs)
+                self._inflight -= len(batch.subs)
+                # wakes both drain() waiters and back-pressured submitters
+                self._idle_cv.notify_all()
+            if self.health is not None:
+                # lane heartbeat: one beat per executed batch
+                self.health.beat(batch.subs[0].slot)
 
     # -------------------------------------------------- executor lanes -----
     @staticmethod
@@ -853,6 +917,7 @@ class ShellScheduler:
             "total_bytes": sum(t.bytes_done for t in tenants.values()),
             "batches": self.batches_issued,
             "entries_coalesced": self.entries_coalesced,
+            "lane_faults": self.lane_faults,
             "lanes_enabled": self.lanes_enabled,
             "lanes": lanes,
         }

@@ -175,6 +175,12 @@ class MMU(Service):
         self._pager_gather: Optional[Callable[[int], Any]] = None
         self._pager_scatter: Optional[Callable[[int, Any], None]] = None
         self._pager_owner: Any = None
+        # armed FaultPlan (wired by Shell.set_fault_plan): probed at the
+        # pager sites ("pager.gather"/"pager.scatter") and in force mode
+        # at "mmu.page_storm" (simulated pool pressure -> real eviction
+        # churn).  Survives configure() — it belongs to the shell.
+        self.faults: Optional[Any] = None
+        self._in_storm = False        # re-entrancy guard (storm fault-in)
         self._init_pools()
 
     def _init_pools(self) -> None:
@@ -313,6 +319,31 @@ class MMU(Service):
                 self._bump_map(seq_id)
 
     def _take_device_page(self, seq_id: int, slot: int) -> int:
+        if (self._free and self.faults is not None and not self._in_storm
+                and self.faults.force("mmu.page_storm",
+                                      slot=slot) is not None):
+            # page-fault storm (behavioural fault): one FULL evict-with-
+            # copy round trip — a victim page gathers out to the host
+            # store and immediately faults back in (fresh page, payload
+            # scattered back).  Real pager churn, real IRQs and counter
+            # movement, byte-identical decode: the victim row never sees
+            # a host-resident (-1) block-table entry.
+            victim = self._pick_victim(exclude=seq_id)
+            target = None
+            if victim is not None:
+                target = next((p for p in
+                               reversed(self._seqs[victim].pages)
+                               if not p.on_host), None)
+            if target is not None:
+                self._in_storm = True     # the fault-in allocates through
+                try:                      # us again: no recursive storms
+                    self.page_faults += 1
+                    self._post(slot, seq_id)             # IRQ_PAGE_FAULT
+                    self._evict_seq_page(victim)
+                    if target.on_host:
+                        self._fault_in(victim, target, slot)
+                finally:
+                    self._in_storm = False
         if not self._free:
             self.page_faults += 1
             self._post(slot, seq_id)                     # IRQ_PAGE_FAULT
@@ -402,11 +433,19 @@ class MMU(Service):
                 if not self._host_free:
                     raise PageFaultError("host pool exhausted")
                 pp = pte.ppage
-                hslot = self._host_free.pop()
+                data = None
                 if self._pager_gather is not None:
                     # REAL migration: copy the page payload to the host
-                    # store before the device page is recycled
-                    self._host_data[hslot] = self._pager_gather(pp)
+                    # store before the device page is recycled.  Gather
+                    # runs BEFORE any pool state mutates — a failing
+                    # gather (or an injected "pager.gather" fault) leaves
+                    # the mapping and both pools exactly as they were.
+                    if self.faults is not None:
+                        self.faults.fire("pager.gather", ppage=pp)
+                    data = self._pager_gather(pp)
+                hslot = self._host_free.pop()
+                if data is not None:
+                    self._host_data[hslot] = data
                 # a shared page moves for EVERY sharer at once: one host
                 # slot backs the group, refcount transfers device->host
                 sharers = set()
@@ -510,10 +549,22 @@ class MMU(Service):
         self._post(slot, seq_id)
         hslot = pte.host_slot
         new_pp = self._take_device_page(seq_id, slot)
-        data = self._host_data.pop(hslot, None)
-        if data is not None and self._pager_scatter is not None:
-            # restore the preserved payload into the fresh page
-            self._pager_scatter(new_pp, data)
+        try:
+            data = self._host_data.get(hslot)
+            if data is not None and self._pager_scatter is not None:
+                if self.faults is not None:
+                    self.faults.fire("pager.scatter", slot=slot,
+                                     hslot=hslot)
+                # restore the preserved payload into the fresh page
+                self._pager_scatter(new_pp, data)
+        except BaseException:
+            # a failed scatter (or injected "pager.scatter" fault) must
+            # not leak the fresh page or drop the preserved payload: the
+            # mapping stays host-resident and a later translate retries
+            self._ref.pop(new_pp, None)
+            self._free.append(new_pp)
+            raise
+        self._host_data.pop(hslot, None)
         sharers = set()
         for sid2, se2 in self._seqs.items():
             for p2 in se2.pages:
@@ -539,6 +590,10 @@ class MMU(Service):
         old = pte.ppage
         payload = None
         if self._pager_gather is not None:
+            # before any state mutates: a failing gather (or injected
+            # "pager.gather" fault) leaves the shared mapping intact
+            if self.faults is not None:
+                self.faults.fire("pager.gather", slot=slot, ppage=old)
             payload = self._pager_gather(old)
         new_pp = self._take_device_page(seq_id, slot)
         if pte.on_host:

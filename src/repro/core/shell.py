@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.core import credits as C
 from repro.core.cthread import CThread
+from repro.core.faults import FaultKind, FaultPlan
+from repro.core.health import HealthMonitor, Watchdog
 from repro.core.interfaces import Oper
 from repro.core.port import (Port, SERVICE_SLOT_BASE, ServicePort,
                              VFpgaPort)
@@ -104,6 +106,13 @@ class Shell:
         # state behind a slot
         self.engines: Dict[int, Any] = {}
         self.built = False
+        # robustness layer: passive health ledger (heartbeats, fault
+        # counts, quarantines) plus an optional armed fault plan, both
+        # shared with the scheduler/MMU via set_fault_plan
+        self.health = HealthMonitor()
+        self.faults: Optional[FaultPlan] = None
+        self._watchdog: Optional[Watchdog] = None
+        self.scheduler.health = self.health
 
     # ==================================================== build ("synthesis")
     def build(self, *, flow: str = "shell") -> BuildReport:
@@ -149,6 +158,11 @@ class Shell:
         for name in list(self.services.names()):
             if name not in wanted:
                 self.services.remove(name)
+        # (re)arm the pager fault hooks on whatever MMU instance the
+        # build produced — set_fault_plan before OR after build both work
+        mmu = self.services.get("mmu")
+        if mmu is not None:
+            mmu.faults = self.faults
 
     def _build_service(self, svc: Service) -> Dict[str, Dict[str, float]]:
         """Compile a service's device artifacts through the compile cache."""
@@ -274,12 +288,17 @@ class Shell:
         drain_s = time.perf_counter() - t_d0
         snap = port.snapshot()
         try:
+            if self.faults is not None:
+                self.faults.fire("reconfig.load", slot=slot)
             stats = self.vfpgas[slot].load(artifact, self.services,
                                            self.mesh)
             port.restore(snap)
-        except BaseException:
+        except BaseException as e:
             # failed swap must not wedge the slot: reopen intake (held
             # invocations replay against whatever logic is loaded)
+            self.health.record_fault(
+                getattr(e, "kind", FaultKind.RECONFIG_ABORT), slot=slot,
+                site="reconfig.load", strike=False, msg=str(e))
             port.resume()
             raise
         replayed = port.resume()
@@ -381,6 +400,85 @@ class Shell:
                 self.vfpgas[slot].tenant = name
         return t
 
+    # ================================================= health / recovery ====
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> None:
+        """Arm (or disarm, with ``None``) a seeded fault plan across
+        every instrumented layer: port dispatch, executor lanes and IO
+        completion, service calls, the MMU pager, reconfigure, and
+        migration.  Deterministic: same plan + same workload => same
+        faults at the same hits."""
+        self.faults = plan
+        self.scheduler.faults = plan
+        mmu = self.services.get("mmu")
+        if mmu is not None:
+            mmu.faults = plan
+
+    def check_health(self, auto_recover: bool = False) -> Dict[str, Any]:
+        """One watchdog sweep: a slot with pending work (queued/active
+        engine requests or in-flight port invocations) whose heartbeat
+        is stale is WEDGED — recorded as a typed fault and, with
+        ``auto_recover``, recovered in place via
+        quiesce-snapshot-restart-restore (:meth:`recover_slot`)."""
+        pending: Dict[int, bool] = {}
+        for slot, eng in list(self.engines.items()):
+            pending[slot] = bool(eng.pending())
+        for port in self.vfpga_ports():
+            slot = port.vfpga.slot
+            pending[slot] = pending.get(slot, False) or port.inflight() > 0
+        wedged = self.health.wedged(pending)
+        recovered: List[int] = []
+        failed: List[int] = []
+        for slot in wedged:
+            tenant = (self.vfpgas[slot].tenant
+                      if slot < len(self.vfpgas) else None)
+            self.health.record_fault(
+                FaultKind.WEDGE, slot=slot, tenant=tenant,
+                site="watchdog", strike=False,
+                msg=f"slot {slot} has pending work but a stale heartbeat")
+            if not auto_recover:
+                continue
+            try:
+                self.recover_slot(slot)
+                recovered.append(slot)
+            except Exception as e:  # noqa: BLE001 — one unrecoverable
+                # slot must not stop the sweep over the others
+                failed.append(slot)
+                self.health.record_event("recovery_failed", slot=slot,
+                                         error=str(e))
+        return {"pending": pending, "wedged": wedged,
+                "recovered": recovered, "failed": failed}
+
+    def vfpga_ports(self) -> List[VFpgaPort]:
+        return [p for p in self.ports.values() if isinstance(p, VFpgaPort)]
+
+    def recover_slot(self, slot: int, *, drain_timeout: float = 5.0):
+        """Recover ONE slot in place: quiesce (force-failing a stuck
+        in-flight tail), snapshot the tenant through the PR-5 migration
+        container, cold-reset the engine's device soft state, restore —
+        KV pages (device + refcounted host payloads) survive and
+        decoding resumes token-for-token.  Returns a
+        :class:`~repro.core.migrate.RecoveryReport`."""
+        from repro.core.migrate import recover_tenant_local
+        report = recover_tenant_local(self, slot,
+                                      drain_timeout=drain_timeout)
+        self.health.record_recovery(slot, report.tenant,
+                                    report.downtime_s)
+        self.health.beat(slot)        # fresh grace period post-recovery
+        return report
+
+    def start_watchdog(self, *, interval_s: float = 0.25,
+                       auto_recover: bool = True) -> Watchdog:
+        """Start (idempotently) the background health sweeper."""
+        if self._watchdog is None:
+            self._watchdog = Watchdog(self, interval_s=interval_s,
+                                      auto_recover=auto_recover)
+        return self._watchdog
+
+    def stop_watchdog(self) -> None:
+        if self._watchdog is not None:
+            self._watchdog.stop()
+            self._watchdog = None
+
     # ================================================= datapath =============
     def kick(self, slot: int) -> None:
         """Legacy datapath: drain a slot's raw send queues into the
@@ -405,6 +503,7 @@ class Shell:
         self.arbiter.drain()          # legacy direct-arbiter submissions
 
     def close(self) -> None:
+        self.stop_watchdog()
         self.scheduler.close()
 
     def status(self) -> Dict[str, Any]:
@@ -418,4 +517,5 @@ class Shell:
             "link_bytes": self.static.pcie.bytes_moved,
             "fairness": self.arbiter.fairness(),
             "scheduler": self.scheduler.stats(),
+            "health": self.health.status(),
         }

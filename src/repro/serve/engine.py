@@ -59,6 +59,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.faults import FaultKind
+from repro.core.port import PortError
 from repro.core.services.mmu import MMU, MMUConfig
 from repro.serve.paged_model import (decode_step_paged, flat_page_indices,
                                      gather_kv_pages, make_pools,
@@ -144,6 +146,7 @@ class ServingEngine:
         self.slot = slot
         self.tenant = tenant
         self.io_bytes = 0
+        self.io_failures = 0          # billed-IO futures that failed typed
         self._io_futs: List = []
         self.port = (shell.attach(slot, tenant=tenant)
                      if shell is not None else None)
@@ -186,6 +189,17 @@ class ServingEngine:
             raise ValueError(
                 f"prompt token out of range for vocab_size="
                 f"{self.cfg.vocab_size}")
+        health = getattr(self.shell, "health", None)
+        if health is not None and health.is_quarantined(self.tenant):
+            # graceful degradation: a repeatedly-faulting tenant is
+            # rejected fast with a typed error, bystanders keep flowing
+            health.record_rejection(self.tenant)
+            raise PortError(
+                f"tenant {self.tenant!r} is quarantined (repeated faults "
+                "within the quarantine window); "
+                "shell.health.unquarantine() to lift",
+                kind=FaultKind.QUARANTINED, slot=self.slot,
+                tenant=self.tenant, retryable=False)
         rid = self._rid_next
         self._rid_next += 1
         self.queue.append(Request(
@@ -342,6 +356,10 @@ class ServingEngine:
     # ------------------------------------------------------------ decode ----
     def step(self) -> int:
         """One continuous-batching engine step; returns tokens emitted."""
+        if self.shell is not None:
+            health = getattr(self.shell, "health", None)
+            if health is not None:
+                health.beat(self.slot)      # watchdog: slot is decoding
         self._settle_io()
         self._admit()
         if self.active == 0:
@@ -421,19 +439,46 @@ class ServingEngine:
         if self._io_futs:
             self._io_futs = [f for f in self._io_futs if not f.done()]
 
-    def flush_io(self, timeout: float = 30.0) -> bool:
+    def flush_io(self, timeout: float = 30.0, *,
+                 strict: bool = False) -> bool:
         """Wait (bounded by one shared deadline) for outstanding billed
-        I/O to clear the link.  Futures that do not clear stay queued so
-        accounting is never silently dropped; returns True when fully
-        drained."""
+        I/O to clear the link.
+
+        A future that FAILED with a typed ``PortError`` is settled — the
+        error was already delivered and health-recorded by the port
+        layer — and counted in ``io_failures``.  Futures that neither
+        complete nor fail stay queued so accounting is never silently
+        dropped.  Returns True when fully drained; a timeout is recorded
+        as an ``io_flush_timeout`` health event when shell-bound, and
+        ``strict=True`` raises it as a typed ``PortError`` instead of
+        returning False."""
         deadline = time.perf_counter() + timeout
         remaining = []
         for fut in self._io_futs:
             left = deadline - time.perf_counter()
-            if left <= 0 or fut.completion(timeout=left) is None:
+            try:
+                comp = fut.completion(timeout=max(left, 0.0))
+            except BaseException:  # noqa: BLE001 — typed failure: the
+                self.io_failures += 1  # IO never cleared but is settled
+                continue
+            if comp is None and not fut.done():
                 remaining.append(fut)
         self._io_futs = [f for f in remaining if not f.done()]
-        return not self._io_futs
+        if not self._io_futs:
+            return True
+        health = getattr(self.shell, "health", None)
+        msg = (f"{len(self._io_futs)} decode-IO future(s) still pending "
+               f"after {timeout}s on slot {self.slot}")
+        if health is not None:
+            health.record_fault(FaultKind.IO_FLUSH_TIMEOUT,
+                                slot=self.slot, tenant=self.tenant,
+                                site="engine.flush_io", strike=False,
+                                msg=msg)
+        if strict:
+            raise PortError(msg, kind=FaultKind.IO_FLUSH_TIMEOUT,
+                            slot=self.slot, tenant=self.tenant,
+                            retryable=True)
+        return False
 
     # ------------------------------------------- migration state (v2) ------
     @staticmethod
@@ -598,6 +643,24 @@ class ServingEngine:
         return {"requests": len(reqs), "queued": len(header["queue"]),
                 "pages": len(header["pages"])
                 + len(arrays.get("host_pages") or {})}
+
+    def reset_decode_state(self) -> None:
+        """Cold-reset the engine's device-side soft state — the local
+        analogue of restarting the slot's logic after a crash: a fresh
+        block-table view, zeroed lens/tokens/sampling params, dropped
+        billed-IO futures, full TLB flush.  KV pool *contents* are not
+        touched: :meth:`restore_state` scatters the preserved page
+        payloads back in right after, which is what makes a recovery
+        KV-intact instead of a re-prefill."""
+        self.block_table = self.mmu.block_table_device(self.max_batch,
+                                                       self.max_pages)
+        self.dev_lens = jnp.zeros((self.max_batch,), jnp.int32)
+        self.dev_tokens = jnp.zeros((self.max_batch,), jnp.int32)
+        self.dev_temps = jnp.zeros((self.max_batch,), jnp.float32)
+        self.dev_topk = jnp.zeros((self.max_batch,), jnp.int32)
+        self.dev_topp = jnp.ones((self.max_batch,), jnp.float32)
+        self._io_futs = []
+        self.mmu.tlb.invalidate()
 
     def evacuate(self) -> Dict[str, int]:
         """Release the tenant's paged state AFTER a successful snapshot

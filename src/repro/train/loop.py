@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.faults import FaultKind, InjectedFault, maybe_fire
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticCorpus
 from repro.launch.steps import make_train_bundle
 from repro.models import transformer as T
@@ -33,8 +34,18 @@ from repro.models.sharding import MeshRules
 from repro.optim import adamw
 
 
-class SimulatedFailure(RuntimeError):
-    """Injected node failure (tests/benchmarks)."""
+class SimulatedFailure(InjectedFault):
+    """Injected whole-node failure — the trainer's member of the ONE
+    shared fault taxonomy (``FaultKind.NODE_FAILURE``, site
+    ``train.step``).  Message-positional construction is preserved for
+    existing callers; the richer serving-side plans arm the same kind
+    through ``TrainConfig.fault_plan`` instead."""
+
+    def __init__(self, message: str = "", **kw: Any):
+        kw.setdefault("kind", FaultKind.NODE_FAILURE)
+        kw.setdefault("site", "train.step")
+        kw.setdefault("retryable", False)
+        super().__init__(message, **kw)
 
 
 @dataclass
@@ -51,6 +62,10 @@ class TrainConfig:
     seed: int = 0
     batch_timeout_s: float = 5.0      # straggler skip threshold
     fail_at_step: int = -1            # inject a failure once at this step
+    # richer injection: a seeded repro.core.faults.FaultPlan probed once
+    # per step at site "train.step" (same taxonomy as the serving shell;
+    # ``fail_at_step`` is sugar for one NODE_FAILURE at a fixed step)
+    fault_plan: Any = None
     straggler_steps: tuple = ()       # steps whose host batch is slow
     straggler_delay_s: float = 0.0
     compression: Any = None           # GradCompression service or None
@@ -141,7 +156,7 @@ class Trainer:
         while self.step < tcfg.steps:
             try:
                 self._run_inner()
-            except SimulatedFailure:
+            except InjectedFault:        # any typed fault kind restarts
                 restarts += 1
                 self.prefetch.stop()
                 self.restore()                 # checkpoint/restart path
@@ -163,6 +178,7 @@ class Trainer:
             if self.step == tcfg.fail_at_step:
                 tcfg.fail_at_step = -1          # fire once
                 raise SimulatedFailure(f"injected at step {self.step}")
+            maybe_fire(tcfg.fault_plan, "train.step")
             got = self.prefetch.get(timeout=tcfg.batch_timeout_s)
             if got is None:                     # straggler: skip dispatch
                 self.skipped_steps.append(self.step)

@@ -1,0 +1,622 @@
+"""Fault-injection harness + self-healing shell.
+
+Seeded deterministic faults (repro.core.faults) injected across every
+layer — port dispatch, executor lanes, IO completion, service calls, the
+MMU pager, reconfigure, migration — and the recovery machinery that
+keeps tenants alive through them: typed failure propagation, bounded
+deadline-aware retry, the slot watchdog, KV-intact local recovery, and
+quarantine of repeatedly-faulting tenants.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AppArtifact, FaultKind, FaultPlan, FaultSpec,
+                        Invocation, MigrationError, Oper, PortState,
+                        SgEntry, Shell, ShellConfig, migrate)
+from repro.core.faults import (DEFAULT_RETRYABLE, DEFAULT_SITES,
+                               InjectedFault, maybe_fire)
+from repro.core.port import PortError
+from repro.core.services import MMUConfig
+from repro.core.services.mmu import MMU
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+
+PAGE = 16
+POOL = 128
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _shell(n_vfpgas=2, **mmu_kw):
+    s = Shell(ShellConfig.make(
+        services={"mmu": MMUConfig(page_size=PAGE, n_pages=POOL,
+                                   **mmu_kw)},
+        n_vfpgas=n_vfpgas))
+    s.build()
+    return s
+
+
+def _engine(cfg, params, shell, *, tenant="gold", rid_base=0, slot=0):
+    return ServingEngine(cfg, params, shell.services.get("mmu"),
+                        max_batch=3, max_len=128, shell=shell, slot=slot,
+                        tenant=tenant, rid_base=rid_base)
+
+
+def _echo_shell(tenant="a", slot=0, n_vfpgas=2):
+    """Shell with a trivial echo app loaded: the SG-path harness."""
+    shell = _shell(n_vfpgas=n_vfpgas)
+    shell.register_tenant(tenant, 1.0, slots=(slot,))
+    shell.load_app(slot, AppArtifact(name="echo", fn=lambda i, v, x: x))
+    return shell, shell.attach(slot)
+
+
+def _sg(i=0, n=64):
+    return Invocation.from_sg(SgEntry(src=np.full(n, i % 251, np.uint8),
+                                      length=n,
+                                      opcode=Oper.LOCAL_TRANSFER))
+
+
+# ===================================================== the fault plan ======
+def test_fault_plan_deterministic_and_positional():
+    """after/count/filters are positional; probabilistic firing draws
+    from the plan's OWN seeded RNG — two same-seed plans fed the same
+    probe sequence fire at exactly the same hits."""
+    plan = FaultPlan([FaultSpec(FaultKind.LANE_CRASH, after=2, count=2)])
+    for _ in range(2):                        # hits 1-2: grace
+        plan.fire("lane.execute")
+    for _ in range(2):                        # hits 3-4: armed
+        with pytest.raises(InjectedFault) as ei:
+            plan.fire("lane.execute")
+        assert ei.value.kind is FaultKind.LANE_CRASH
+        assert ei.value.retryable            # DEFAULT_RETRYABLE
+    plan.fire("lane.execute")                 # hit 5: spec spent
+    assert plan.exhausted()
+    assert plan.stats()["specs"][0]["fired"] == 2
+
+    # slot/tenant filters
+    scoped = FaultPlan([FaultSpec(FaultKind.IO_ERROR, slot=1,
+                                  tenant="gold")])
+    scoped.fire("io.complete", slot=0, tenant="gold")     # wrong slot
+    scoped.fire("io.complete", slot=1, tenant="bronze")   # wrong tenant
+    with pytest.raises(InjectedFault):
+        scoped.fire("io.complete", slot=1, tenant="gold")
+
+    # probabilistic determinism: same seed => same firing hits
+    def run(seed):
+        p = FaultPlan([FaultSpec(FaultKind.DISPATCH, count=100, p=0.3)],
+                      seed=seed)
+        hits = []
+        for i in range(200):
+            try:
+                p.fire("port.dispatch")
+            except InjectedFault:
+                hits.append(i)
+        return hits
+    assert run(7) == run(7)
+    assert 20 < len(run(7)) < 100             # p=0.3 actually gates
+
+    # default sites cover every injectable kind; kinds without a default
+    # site must be given one explicitly
+    for kind, site in DEFAULT_SITES.items():
+        assert FaultSpec(kind).site == site
+    with pytest.raises(ValueError, match="needs a site"):
+        FaultSpec(FaultKind.WEDGE)
+    maybe_fire(None, "port.dispatch")         # unarmed runs: no-op
+
+
+# ========================================== typed failure propagation ======
+def test_dispatch_fault_fails_future_typed():
+    """A dispatch-path exception can never leave the future unresolved:
+    it fails with a structured PortError (kind/slot/tenant/retryable)
+    and is accounted in the health ledger."""
+    shell, port = _echo_shell(tenant="gold")
+    shell.set_fault_plan(FaultPlan.single(FaultKind.DISPATCH))
+    fut = port.submit(Invocation.io(256, tenant="gold"))
+    with pytest.raises(PortError) as ei:
+        fut.result(timeout=10.0)
+    err = ei.value
+    assert err.kind == "dispatch"
+    assert err.slot == 0 and err.tenant == "gold"
+    assert err.retryable
+    assert isinstance(err.cause, InjectedFault)
+    st = port.stats()
+    assert st["failed"] == 1 and st["inflight"] == 0
+    assert shell.health.status()["fault_counts"]["dispatch"] == 1
+    # the port is not poisoned: the next submission completes
+    assert port.submit(Invocation.io(256, tenant="gold")).result(
+        timeout=10.0).ok
+    shell.close()
+
+
+def test_lane_crash_surfaces_failed_completion_and_retries():
+    """An executor-lane body exception becomes Completion(ok=False)
+    carrying the typed fault (legacy semantics, default policy); with
+    max_retries the SAME invocation re-dispatches and succeeds."""
+    shell, port = _echo_shell()
+    plan = FaultPlan.single(FaultKind.LANE_CRASH)
+    shell.set_fault_plan(plan)
+    comp = port.submit(_sg()).result(timeout=10.0)
+    assert not comp.ok
+    assert isinstance(comp.result, InjectedFault)
+    assert comp.result.kind is FaultKind.LANE_CRASH
+    assert shell.scheduler.stats()["lane_faults"] == 1
+    assert shell.health.status()["fault_counts"]["lane_crash"] == 1
+
+    plan.arm(FaultSpec(FaultKind.LANE_CRASH))         # re-arm once
+    inv = _sg(1)
+    inv.max_retries = 1
+    comp = port.submit(inv).result(timeout=10.0)
+    assert comp.ok                                     # retry recovered it
+    assert port.stats()["retried"] == 1
+    assert inv.retries == 1
+    shell.close()
+
+
+def test_io_error_fails_future_typed_and_retries():
+    shell, port = _echo_shell(tenant="gold")
+    plan = FaultPlan.single(FaultKind.IO_ERROR)
+    shell.set_fault_plan(plan)
+    with pytest.raises(PortError) as ei:
+        port.submit(Invocation.io(512, tenant="gold")).result(timeout=10.0)
+    assert ei.value.kind == "io_error" and ei.value.retryable
+    assert shell.health.status()["fault_counts"]["io_error"] == 1
+
+    plan.arm(FaultSpec(FaultKind.IO_ERROR))
+    inv = Invocation.io(512, tenant="gold")
+    inv.max_retries = 2
+    comp = port.submit(inv).result(timeout=10.0)
+    assert comp.ok and port.stats()["retried"] == 1
+    shell.close()
+
+
+def test_retry_respects_deadline():
+    """Deadline-aware retry: a backoff that cannot finish before the
+    invocation's SLO deadline is not attempted — the fault surfaces
+    immediately instead of sleeping past the deadline."""
+    shell, port = _echo_shell(tenant="gold")
+    shell.set_fault_plan(FaultPlan.single(FaultKind.DISPATCH, count=3))
+    inv = Invocation.io(64, tenant="gold", deadline_s=0.05)
+    inv.max_retries = 3
+    inv.retry_backoff_s = 5.0                 # way past the deadline
+    t0 = time.perf_counter()
+    with pytest.raises(PortError) as ei:
+        port.submit(inv).result(timeout=10.0)
+    assert time.perf_counter() - t0 < 2.0     # no 5s backoff sleep
+    assert ei.value.kind == "dispatch"
+    assert inv.retries == 0                   # retry declined, not burned
+    shell.close()
+
+
+def test_service_call_fault_completion_and_retry(served):
+    shell = _shell()
+    port = shell.attach("mmu")
+    plan = FaultPlan.single(FaultKind.SERVICE_CALL)
+    shell.set_fault_plan(plan)
+    comp = port.call(Invocation.call("utilization"), timeout=10.0)
+    assert not comp.ok
+    assert isinstance(comp.result, InjectedFault)
+    assert comp.result.kind is FaultKind.SERVICE_CALL
+    # spec spent: the same call now succeeds
+    comp = port.call(Invocation.call("utilization"), timeout=10.0)
+    assert comp.ok and comp.result["pages_total"] == POOL
+
+    plan.arm(FaultSpec(FaultKind.SERVICE_CALL))
+    inv = Invocation.call("utilization")
+    inv.max_retries = 1
+    comp = port.submit(inv).result(timeout=10.0)
+    assert comp.ok and port.stats()["retried"] == 1
+    shell.close()
+
+
+def test_quiesce_timeout_restores_active_intake():
+    """Satellite fix: a quiesce that cannot drain no longer leaves the
+    port wedged DRAINING — intake reopens and the timeout is a typed
+    health event."""
+    shell, port = _echo_shell()
+    shell.scheduler.pause()                   # in-flight tail can't drain
+    futs = [port.submit(_sg(i)) for i in range(3)]
+    assert port.quiesce(timeout=0.2) is False
+    assert port.state is PortState.ACTIVE     # intake reopened
+    counts = shell.health.status()["fault_counts"]
+    assert counts.get("quiesce_timeout") == 1
+    assert not shell.health.status()["quarantined"]   # strike-free
+    shell.scheduler.resume()
+    assert all(f.result(timeout=10.0).ok for f in futs)
+    assert port.quiesce(timeout=10.0)         # drains fine when unblocked
+    port.resume()
+    shell.close()
+
+
+def test_flush_io_timeout_typed_and_strict(served):
+    """Satellite fix: flush_io's False return is now observable — the
+    residue is health-recorded and strict=True raises it typed."""
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    shell.scheduler.pause()
+    eng._io_futs.append(eng.port.submit(
+        Invocation.io(64, tenant="gold")))
+    assert eng.flush_io(timeout=0.2) is False
+    with pytest.raises(PortError) as ei:
+        eng.flush_io(timeout=0.2, strict=True)
+    assert ei.value.kind == "io_flush_timeout" and ei.value.retryable
+    counts = shell.health.status()["fault_counts"]
+    assert counts.get("io_flush_timeout", 0) >= 2
+    shell.scheduler.resume()
+    assert eng.flush_io(timeout=10.0) is True
+    shell.close()
+
+
+# ================================================= the pager under fault ===
+def test_pager_gather_fault_typed_then_preserved(served):
+    """An evict-with-copy gather failure surfaces typed; the victim
+    sequence is never corrupted, and once the fault clears the same
+    eviction preserves the exact bytes."""
+    cfg, params = served
+    mmu = MMU(MMUConfig(page_size=8, n_pages=8, host_pool_pages=64))
+    eng = ServingEngine(cfg, params, mmu, max_batch=2, max_len=80)
+    eng.submit(list(range(3, 30)), max_new_tokens=30)
+    for _ in range(3):
+        eng.step()
+    se = mmu._seqs[1]
+    pre = {p.vpage: eng._pager_gather(p.ppage)
+           for p in se.pages if not p.on_host}
+    mmu.faults = FaultPlan.single(FaultKind.PAGER_GATHER)
+    with pytest.raises(InjectedFault) as ei:
+        mmu.alloc_seq(99, 8 * (len(mmu._free) + 2))   # pressure -> evict
+    assert ei.value.kind is FaultKind.PAGER_GATHER
+    if 99 in mmu._seqs:                       # partial alloc: roll back
+        mmu.free_seq(99)
+    # fault cleared: the eviction completes and the bytes are preserved
+    mmu.alloc_seq(99, 8 * (len(mmu._free) + 2))
+    evicted = [p.vpage for p in se.pages if p.on_host]
+    assert evicted
+    for v in evicted:
+        stored = mmu.host_page_data(1, v)
+        np.testing.assert_array_equal(stored["k"], pre[v]["k"])
+        np.testing.assert_array_equal(stored["v"], pre[v]["v"])
+
+
+def test_pager_scatter_fault_leaks_no_device_page(served):
+    """A fault-back-in scatter failure returns the freshly allocated
+    device page to the pool and keeps the host payload, so the retry
+    restores the exact bytes."""
+    cfg, params = served
+    mmu = MMU(MMUConfig(page_size=8, n_pages=8, host_pool_pages=64))
+    eng = ServingEngine(cfg, params, mmu, max_batch=2, max_len=80)
+    eng.submit(list(range(3, 30)), max_new_tokens=30)
+    for _ in range(3):
+        eng.step()
+    se = mmu._seqs[1]
+    pre = {p.vpage: eng._pager_gather(p.ppage)
+           for p in se.pages if not p.on_host}
+    mmu.alloc_seq(99, 8 * (len(mmu._free) + 2))       # evict some of seq 1
+    evicted = [p.vpage for p in se.pages if p.on_host]
+    assert evicted
+    mmu.free_seq(99)                                  # room to fault in
+    free_before = len(mmu._free)
+    mmu.faults = FaultPlan.single(FaultKind.PAGER_SCATTER)
+    with pytest.raises(InjectedFault) as ei:
+        mmu.translate(1, evicted[0] * 8)
+    assert ei.value.kind is FaultKind.PAGER_SCATTER
+    assert len(mmu._free) == free_before              # page returned
+    assert mmu.host_page_data(1, evicted[0]) is not None  # payload kept
+    ppage, _ = mmu.translate(1, evicted[0] * 8)       # retry succeeds
+    assert ppage >= 0
+    got = eng._pager_gather(ppage)
+    np.testing.assert_array_equal(got["k"], pre[evicted[0]]["k"])
+    np.testing.assert_array_equal(got["v"], pre[evicted[0]]["v"])
+
+
+def test_page_fault_storm_token_parity(served):
+    """The behavioural fault: a forced eviction storm churns pages
+    through the evict-with-copy pager mid-decode — and because the pager
+    preserves bytes, the tokens are identical to a storm-free run."""
+    cfg, params = served
+    shell = _shell(host_pool_pages=256)
+    eng = _engine(cfg, params, shell)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    plan = FaultPlan.single(FaultKind.PAGE_FAULT_STORM, count=6)
+    shell.set_fault_plan(plan)
+    reqs = [(list(range(3, 8)), 0.0), (list(range(3, 20)), 0.0),
+            (list(range(3, 12)), 1.3)]
+    for prompt, temp in reqs:
+        eng.submit(prompt, max_new_tokens=12, temperature=temp)
+        oracle.submit(prompt, max_new_tokens=12, temperature=temp)
+    while eng.pending():
+        eng.step()
+    while oracle.pending():
+        oracle.step()
+    mmu = shell.services.get("mmu")
+    assert mmu.page_faults >= 1                       # storm really churned
+    assert plan.stats()["specs"][0]["fired"] >= 1
+    got = {r.rid: r.out_tokens for r in eng.completed}
+    want = {r.rid: r.out_tokens for r in oracle.completed}
+    assert got == want
+    shell.close()
+
+
+# ============================================= watchdog + local recovery ===
+def test_recover_slot_kv_intact_token_parity(served):
+    """THE acceptance pin: a slot recovered in place (quiesce, snapshot
+    through the migration container, cold-reset, restore) resumes
+    decoding token-for-token — greedy AND sampled rows — with zero lost
+    or duplicated completions, while a bystander tenant's traffic is
+    untouched."""
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    reqs = [(list(range(3, 8)), 0.0), (list(range(3, 20)), 0.0),
+            (list(range(3, 12)), 1.3)]
+    for prompt, temp in reqs:
+        eng.submit(prompt, max_new_tokens=12, temperature=temp)
+        oracle.submit(prompt, max_new_tokens=12, temperature=temp)
+    for _ in range(4):                                # mid-decode
+        eng.step()
+        oracle.step()
+
+    # bystander tenant on slot 1, in flight THROUGH the recovery
+    shell.register_tenant("bronze", 1.0, slots=(1,))
+    shell.load_app(1, AppArtifact(name="echo", fn=lambda i, v, x: x))
+    bport = shell.attach(1)
+    n = 60
+    bfuts = []
+
+    def drive():
+        for i in range(n):
+            bfuts.append(bport.submit(_sg(i)))
+
+    t = threading.Thread(target=drive)
+    t.start()
+    report = shell.recover_slot(0)
+    t.join()
+
+    assert report.slot == 0 and report.tenant == "gold"
+    assert report.n_requests == 3 and report.n_pages > 0
+    assert report.downtime_s > 0
+    while eng.pending():
+        eng.step()
+    while oracle.pending():
+        oracle.step()
+    got = {r.rid: r.out_tokens for r in eng.completed}
+    want = {r.rid: r.out_tokens for r in oracle.completed}
+    assert got == want                                # KV survived intact
+
+    comps = [f.result(timeout=30.0) for f in bfuts]
+    assert len(comps) == n and all(c.ok for c in comps)
+    shell.drain()
+    bstats = shell.scheduler.stats()["tenants"]["bronze"]
+    assert bstats["completions"] == n
+    assert bstats["intake_stalls"] == 0
+    # zero lost/dup on the recovered slot's port
+    pstats = shell.attach(0).stats()
+    assert pstats["submitted"] == pstats["completed"] + pstats["failed"]
+    assert pstats["inflight"] == 0 and pstats["held"] == 0
+    assert shell.health.recoveries == 1
+    shell.close()
+
+
+def test_check_health_detects_and_recovers_wedged_slot(served):
+    """The watchdog loop end to end: a slot with pending work and a
+    stale heartbeat is flagged WEDGED, quarantine-free recovered, and
+    finishes its decode token-for-token."""
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    eng.submit(list(range(3, 12)), max_new_tokens=8)
+    oracle.submit(list(range(3, 12)), max_new_tokens=8)
+    eng.step()                                        # beats once
+    oracle.step()
+    shell.health.heartbeat_timeout_s = 0.05
+    time.sleep(0.12)                                  # ...then goes quiet
+    res = shell.check_health(auto_recover=True)
+    assert res["pending"][0] is True
+    assert 0 in res["wedged"] and 0 in res["recovered"]
+    assert shell.health.status()["fault_counts"]["wedge"] == 1
+    while eng.pending():
+        eng.step()
+    while oracle.pending():
+        oracle.step()
+    assert ([r.out_tokens for r in eng.completed]
+            == [r.out_tokens for r in oracle.completed])
+    # idle slots are never wedged: a fresh sweep flags nothing
+    time.sleep(0.12)
+    assert shell.check_health()["wedged"] == []
+    shell.close()
+
+
+def test_watchdog_thread_sweeps_and_stops(served):
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    shell.health.heartbeat_timeout_s = 0.03
+    eng.submit(list(range(3, 10)), max_new_tokens=4)
+    eng.step()                                        # beat, then silence
+    wd = shell.start_watchdog(interval_s=0.02, auto_recover=False)
+    assert shell.start_watchdog() is wd               # idempotent
+    deadline = time.perf_counter() + 5.0
+    while (not shell.health.status()["fault_counts"].get("wedge")
+           and time.perf_counter() < deadline):
+        time.sleep(0.02)
+    assert wd.sweeps >= 1
+    assert shell.health.status()["fault_counts"].get("wedge", 0) >= 1
+    shell.stop_watchdog()
+    assert not wd.thread.is_alive()
+    while eng.pending():
+        eng.step()
+    shell.close()                                     # double-stop is fine
+
+
+# ======================================================== quarantine =======
+def test_repeated_faults_quarantine_tenant_typed_rejections(served):
+    """Graceful degradation: strikes inside the window quarantine the
+    tenant — port AND engine submissions reject fast with a typed
+    PortError — while a bystander keeps flowing; unquarantine lifts."""
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    shell.register_tenant("bronze", 1.0, slots=(1,))
+    shell.load_app(1, AppArtifact(name="echo", fn=lambda i, v, x: x))
+    bport = shell.attach(1)
+    shell.health.quarantine_after = 2
+    shell.set_fault_plan(FaultPlan.single(
+        FaultKind.DISPATCH, count=2, tenant="gold"))
+    port = shell.attach(0)
+    for _ in range(2):                                # two strikes...
+        with pytest.raises(PortError):
+            port.submit(Invocation.io(64, tenant="gold")).result(
+                timeout=10.0)
+    assert shell.health.is_quarantined("gold")        # ...you're out
+    with pytest.raises(PortError) as ei:
+        port.submit(Invocation.io(64, tenant="gold"))
+    assert ei.value.kind == "quarantined" and not ei.value.retryable
+    with pytest.raises(PortError) as ei:
+        eng.submit(list(range(3, 10)), max_new_tokens=4)
+    assert ei.value.kind == "quarantined"
+    assert shell.health.rejections == 2
+    assert "gold" in shell.status()["health"]["quarantined"]
+    # the bystander never noticed
+    assert bport.submit(_sg()).result(timeout=10.0).ok
+    # operator verb lifts it; the strike window restarts clean
+    assert shell.health.unquarantine("gold")
+    assert port.submit(Invocation.io(64, tenant="gold")).result(
+        timeout=10.0).ok
+    eng.submit(list(range(3, 10)), max_new_tokens=2)
+    while eng.pending():
+        eng.step()
+    shell.close()
+
+
+# =============================================== migration / reconfig ======
+def test_mid_migration_abort_leaves_source_serving_parity(served):
+    """An injected restore-stage failure aborts the migration; the
+    source tenant keeps serving and produces the fault-free tokens."""
+    cfg, params = served
+    src, dst = _shell(), _shell()
+    eng_src = _engine(cfg, params, src)
+    _engine(cfg, params, dst)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    reqs = [(list(range(3, 8)), 0.0), (list(range(3, 12)), 1.3)]
+    for prompt, temp in reqs:
+        eng_src.submit(prompt, max_new_tokens=10, temperature=temp)
+        oracle.submit(prompt, max_new_tokens=10, temperature=temp)
+    for _ in range(3):
+        eng_src.step()
+        oracle.step()
+    src.set_fault_plan(FaultPlan.single(FaultKind.MIGRATION_FAIL))
+    with pytest.raises(MigrationError):
+        migrate(src, dst, "gold")
+    assert src.health.status()["fault_counts"]["migration_fail"] == 1
+    assert src.attach(0).state is PortState.ACTIVE
+    while eng_src.pending():
+        eng_src.step()
+    while oracle.pending():
+        oracle.step()
+    assert ({r.rid: r.out_tokens for r in eng_src.completed}
+            == {r.rid: r.out_tokens for r in oracle.completed})
+    # the plan is spent: the SAME migration now goes through
+    report = migrate(src, dst, "gold")
+    assert report.n_requests == 0                     # all done already
+    src.close()
+    dst.close()
+
+
+def test_reconfig_abort_typed_and_slot_survives():
+    shell, port = _echo_shell()
+    shell.set_fault_plan(FaultPlan.single(FaultKind.RECONFIG_ABORT))
+    with pytest.raises(InjectedFault) as ei:
+        shell.reconfigure(0, AppArtifact(name="echo2",
+                                         fn=lambda i, v, x: x))
+    assert ei.value.kind is FaultKind.RECONFIG_ABORT
+    counts = shell.health.status()["fault_counts"]
+    assert counts["reconfig_abort"] == 1
+    assert port.state is PortState.ACTIVE             # intake reopened
+    assert port.submit(_sg()).result(timeout=10.0).ok
+    # spec spent: the swap now succeeds
+    stats = shell.reconfigure(0, AppArtifact(name="echo2",
+                                             fn=lambda i, v, x: x))
+    assert stats["total_s"] > 0
+    shell.close()
+
+
+# ================================================== trainer unification ====
+def test_trainer_failure_is_shared_taxonomy():
+    """Satellite: SimulatedFailure IS an InjectedFault of kind
+    NODE_FAILURE — one taxonomy across serving and training — and
+    TrainConfig.fault_plan probes the standard train.step site."""
+    from repro.train.loop import SimulatedFailure, TrainConfig
+    e = SimulatedFailure("boom")
+    assert isinstance(e, InjectedFault)
+    assert e.kind is FaultKind.NODE_FAILURE
+    assert e.site == "train.step" and not e.retryable
+    assert FaultKind.NODE_FAILURE not in DEFAULT_RETRYABLE
+    plan = FaultPlan.single(FaultKind.NODE_FAILURE, after=1)
+    assert TrainConfig(fault_plan=plan).fault_plan is plan
+    maybe_fire(plan, "train.step")                    # grace hit
+    with pytest.raises(InjectedFault) as ei:
+        maybe_fire(plan, "train.step")
+    assert ei.value.kind is FaultKind.NODE_FAILURE
+
+
+# ============================================================ fuzz =========
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_fuzz_storm_every_future_resolves(seed):
+    """Seed sweep under a probabilistic multi-site storm: whatever
+    fires, every future resolves exactly once (Completion or typed
+    error) and the port accounting balances — nothing hangs, nothing is
+    double-counted."""
+    shell, port = _echo_shell(tenant="a")
+    shell.health.quarantine_after = 10 ** 6           # keep intake open
+    shell.set_fault_plan(FaultPlan([
+        FaultSpec(FaultKind.DISPATCH, count=100, p=0.25),
+        FaultSpec(FaultKind.LANE_CRASH, count=100, p=0.25),
+        FaultSpec(FaultKind.IO_ERROR, count=100, p=0.25),
+        FaultSpec(FaultKind.SERVICE_CALL, count=100, p=0.25),
+    ], seed=seed))
+    mmu_port = shell.attach("mmu")
+    futs = []
+    for i in range(20):
+        inv = _sg(i)
+        inv.max_retries = i % 2
+        futs.append((port, port.submit(inv)))
+        io = Invocation.io(64, tenant="a")
+        io.max_retries = i % 2
+        futs.append((port, port.submit(io)))
+        futs.append((mmu_port, mmu_port.submit(
+            Invocation.call("utilization"))))
+    ok = failed = 0
+    for _p, fut in futs:
+        try:
+            comp = fut.result(timeout=30.0)
+            ok += 1
+            assert comp is not None
+        except PortError:
+            failed += 1
+    assert ok + failed == len(futs)                   # all resolved
+    for p in (port, mmu_port):
+        st = p.stats()
+        assert st["submitted"] == st["completed"] + st["failed"]
+        assert st["inflight"] == 0 and st["held"] == 0
+    shell.drain()
+    shell.close()
