@@ -50,6 +50,8 @@ SUITES = [
      "Prefix sharing: 90%-shared prefill cost + effective KV capacity"),
     ("fault_storm", "bench_faults",
      "Fault storm: recovery downtime + bystander p99"),
+    ("serving_gateway", "bench_gateway",
+     "Serving gateway: open-arrival goodput, TTFT SLOs, admission"),
     ("multipod_collectives", "bench_multipod",
      "Multi-pod: flat vs hierarchical all-reduce schedules"),
     ("roofline", "bench_roofline",
@@ -65,6 +67,7 @@ JSON_ARTIFACTS = {
     "live_migrate": ("BENCH_migrate.json", "bench_migrate"),
     "prefix_sharing": ("BENCH_prefix.json", "bench_prefix"),
     "fault_storm": ("BENCH_faults.json", "bench_faults"),
+    "serving_gateway": ("BENCH_gateway.json", "bench_gateway"),
 }
 
 

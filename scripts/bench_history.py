@@ -45,7 +45,9 @@ HISTORY_PATH = "BENCH_HISTORY.jsonl"
 EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1),
                  ("p99_speedup_x", +1), ("prefill_speedup_x", +1),
                  ("capacity_x", +1), ("recovery_p99_ms", -1),
-                 ("bystander_p99_ms", -1))
+                 ("bystander_p99_ms", -1), ("goodput_x", +1),
+                 ("ttft_speedup_x", +1), ("goodput", +1),
+                 ("ttft_p99_ms", -1))
 
 
 def metric_of(row: Dict) -> Optional[tuple]:

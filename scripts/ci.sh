@@ -37,12 +37,18 @@ python examples/fault_recovery.py
 # sharing stops paying for itself)
 python examples/prefix_sharing.py
 
+# smoke the serving-gateway demo (Poisson mixed-SLO-tier traffic with
+# continuous batching + chunked prefill, a live typed SLO rejection, a
+# queued-deadline expiry, and priority aging — examples/
+# gateway_serving.py exits non-zero if any of those stop holding)
+python examples/gateway_serving.py
+
 # substring match: llm_serving runs both the sweep (-> BENCH_serving.json)
 # and llm_serving_scaling (Fig 10b concurrency curve); scheduler_qos,
 # kernel_microbench, multislot_lanes and live_migrate write their
 # BENCH_*.json artifacts
 python -m benchmarks.run \
-  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm
+  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm,serving_gateway
 
 # Gated trend check: diff fresh artifacts against the previous PR's
 # committed versions (git show HEAD:..., falling back to
@@ -85,10 +91,18 @@ python scripts/diff_bench.py BENCH_prefix.json    --warn-pct 100 "${STRICT[@]}"
 # (measured: recovery p99 ~240-260ms, bystander p99 0.3-3ms depending
 # on storm overlap) — 200% floor = order-of-magnitude guard only
 python scripts/diff_bench.py BENCH_faults.json    --warn-pct 200 "${STRICT[@]}"
+# gateway: the SLO claims (continuous >= 1.3x wave goodput, chunked
+# prefill >= 2x short-TTFT p99, exactly-once + oracle token parity
+# under admission churn) are HARD-ASSERTED inside bench_gateway.run().
+# Trend rows: goodput_x 3.3-3.7 run-to-run (+-10%), raw goodput +-20%,
+# but the ms-scale chunked-TTFT p99 cells swing ~70% under host load —
+# 150% floor = order-of-magnitude guard over the noisiest row
+python scripts/diff_bench.py BENCH_gateway.json   --warn-pct 150 "${STRICT[@]}"
 
 # record this run in the history store (keyed by commit+suite+config;
 # re-runs on the same commit replace, never duplicate), keeping the
 # last ~50 commits of history
 python scripts/bench_history.py append BENCH_serving.json \
   BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json \
-  BENCH_migrate.json BENCH_prefix.json BENCH_faults.json --prune 50
+  BENCH_migrate.json BENCH_prefix.json BENCH_faults.json \
+  BENCH_gateway.json --prune 50

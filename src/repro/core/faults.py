@@ -68,6 +68,9 @@ class FaultKind(str, Enum):
     QUIESCE_TIMEOUT = "quiesce_timeout"  # drain did not converge
     IO_FLUSH_TIMEOUT = "io_flush_timeout"  # flush_io did not drain
     QUARANTINED = "quarantined"          # typed rejection of a bad tenant
+    SLO_INFEASIBLE = "slo_infeasible"    # gateway: deadline can't be met
+    SLO_EXPIRED = "slo_expired"          # gateway: deadline passed queued
+    GATEWAY_FULL = "gateway_full"        # gateway: admission queue bound
 
 
 # Kinds that are transient by nature: a bounded re-dispatch of the same
@@ -78,6 +81,8 @@ DEFAULT_RETRYABLE = frozenset({
     FaultKind.LANE_CRASH, FaultKind.IO_ERROR, FaultKind.DISPATCH,
     FaultKind.SERVICE_CALL, FaultKind.PAGER_GATHER,
     FaultKind.PAGER_SCATTER, FaultKind.PAGE_FAULT_STORM,
+    # a full gateway queue is load, not damage: back off and resubmit
+    FaultKind.GATEWAY_FULL,
 })
 
 # Default injection site per kind, for the FaultPlan.single() shorthand.

@@ -75,6 +75,7 @@ class Tenant:
     batches: int = 0
     bytes_done: int = 0
     lat_sum_s: float = 0.0
+    deadline_misses: int = 0                 # completed past their deadline
     t_first_submit: float = 0.0
     t_last_done: float = 0.0
 
@@ -86,6 +87,7 @@ class Tenant:
             "completions": self.completions,
             "batches": self.batches,
             "bytes": self.bytes_done,
+            "deadline_misses": self.deadline_misses,
             "mean_latency_s": self.lat_sum_s / max(self.completions, 1),
             "throughput_bps": self.bytes_done / span if self.bytes_done
             else 0.0,
@@ -840,6 +842,10 @@ class ShellScheduler:
                 for sub in batch.subs:
                     ten.completions += 1
                     ten.lat_sum_s += now - sub.t_submit
+                    if now > sub.deadline:
+                        # SLO accounting: the invocation finished past
+                        # its absolute deadline (inf = no deadline)
+                        ten.deadline_misses += 1
                 ten.batches += 1
                 ten.bytes_done += batch.nbytes
                 ten.t_last_done = now

@@ -226,7 +226,8 @@ class MMU(Service):
 
     # -- allocation -----------------------------------------------------------
     def alloc_seq(self, seq_id: int, n_tokens: int = 0, *, slot: int = 0,
-                  prompt_tokens: Optional[Sequence[int]] = None) -> int:
+                  prompt_tokens: Optional[Sequence[int]] = None,
+                  publish: bool = True) -> int:
         """Allocate a sequence of ``n_tokens``; returns the number of
         prompt tokens whose pages were mapped SHARED (0 without sharing).
 
@@ -240,6 +241,13 @@ class MMU(Service):
         prefix's KV in the same admission pass (the serving engine's
         prefill does), which is what makes them canonical for later
         sequences.
+
+        ``publish=False`` defers that registration: the sequence still
+        CONSUMES existing shared pages, but its own pages only become
+        canonical when the caller invokes :meth:`publish_prefix` — the
+        contract chunked prefill needs, where page *mappings* exist at
+        admission but their KV *content* lands over several later steps
+        and must not be consumed by other sequences in between.
         """
         hashes: List[str] = []
         if prompt_tokens is not None and self.config.prefix_sharing:
@@ -268,21 +276,44 @@ class MMU(Service):
                 self._bump_map(seq_id)
         if n_tokens > covered:
             self.extend_seq(seq_id, n_tokens - covered, slot=slot)
-        if hashes:
-            with self._lock:
-                se = self._seqs.get(seq_id)
-                ncov = covered // self.config.page_size
-                for j in range(ncov, len(hashes)):
-                    if se is None or j >= len(se.pages):
-                        break
-                    pte = se.pages[j]
-                    if (pte.on_host or pte.ppage < 0
-                            or pte.ppage in self._page_hash
-                            or hashes[j] in self._prefix_index):
-                        continue
-                    self._prefix_index[hashes[j]] = pte.ppage
-                    self._page_hash[pte.ppage] = hashes[j]
+        if hashes and publish:
+            self._register_prefix(seq_id, hashes,
+                                  covered // self.config.page_size)
         return covered
+
+    def _register_prefix(self, seq_id: int, hashes: List[str],
+                         first_page: int) -> None:
+        """Make a sequence's private full prompt pages canonical for the
+        prefix index (pages before ``first_page`` were mapped shared)."""
+        with self._lock:
+            se = self._seqs.get(seq_id)
+            for j in range(first_page, len(hashes)):
+                if se is None or j >= len(se.pages):
+                    break
+                pte = se.pages[j]
+                if (pte.on_host or pte.ppage < 0
+                        or pte.ppage in self._page_hash
+                        or hashes[j] in self._prefix_index):
+                    continue
+                self._prefix_index[hashes[j]] = pte.ppage
+                self._page_hash[pte.ppage] = hashes[j]
+
+    def publish_prefix(self, seq_id: int,
+                       prompt_tokens: Sequence[int]) -> None:
+        """Deferred half of ``alloc_seq(..., publish=False)``: register
+        the sequence's full prompt pages in the prefix index once their
+        KV content is actually resident (the serving engine calls this
+        when a chunked prefill lands its final chunk).  A no-op for
+        freed sequences and with sharing disabled."""
+        if not self.config.prefix_sharing:
+            return
+        ps = self.config.page_size
+        hashes: List[str] = []
+        h = ""
+        for j in range(len(prompt_tokens) // ps):
+            h = _chain_hash(h, prompt_tokens[j * ps:(j + 1) * ps])
+            hashes.append(h)
+        self._register_prefix(seq_id, hashes, 0)
 
     def probe_prefix(self, prompt_tokens: Sequence[int]) -> int:
         """How many leading prompt tokens the prefix index would map to

@@ -1,10 +1,13 @@
 from repro.serve.engine import Request, ServingEngine
+from repro.serve.gateway import ServingGateway, TokenStream
 from repro.serve.paged_model import (TRACE_COUNTS, decode_step_paged,
-                                     make_pools, prefill_paged,
-                                     write_prefill)
-from repro.serve.sampler import SamplerConfig, sample, sample_per_row
+                                     make_pools, prefill_chunk_paged,
+                                     prefill_paged, write_prefill)
+from repro.serve.sampler import (SamplerConfig, fold_row_keys, sample,
+                                 sample_per_row)
 from repro.serve.disaggregated import handoff_wire_bytes, make_handoff_fn
-__all__ = ["Request", "ServingEngine", "decode_step_paged", "make_pools",
+__all__ = ["Request", "ServingEngine", "ServingGateway", "TokenStream",
+           "decode_step_paged", "make_pools", "prefill_chunk_paged",
            "prefill_paged", "write_prefill", "TRACE_COUNTS",
-           "SamplerConfig", "sample", "sample_per_row",
+           "SamplerConfig", "fold_row_keys", "sample", "sample_per_row",
            "handoff_wire_bytes", "make_handoff_fn"]

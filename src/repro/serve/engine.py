@@ -64,6 +64,7 @@ from repro.core.port import PortError
 from repro.core.services.mmu import MMU, MMUConfig
 from repro.serve.paged_model import (decode_step_paged, flat_page_indices,
                                      gather_kv_pages, make_pools,
+                                     prefill_chunk_paged,
                                      prefill_shared_paged,
                                      scatter_kv_pages)
 
@@ -77,11 +78,17 @@ class Request:
     top_k: int = 0                    # 0 = disabled
     top_p: float = 1.0                # >= 1 = disabled
     tid: int = 0                      # submitting cThread
+    priority: int = 0                 # scheduler priority (higher = sooner)
+    deadline_s: Optional[float] = None  # absolute SLO deadline (perf_counter)
     out_tokens: List[int] = field(default_factory=list)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     done: bool = False
+    # chunked-prefill cursor: -1 = not chunking; >= 0 = prompt tokens
+    # whose KV is already in the pools (the row holds a slot + pages but
+    # is NOT bound into the decode batch until its final chunk lands)
+    prefill_pos: int = -1
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -99,7 +106,8 @@ class ServingEngine:
                  use_pallas: bool = False,
                  pages_per_block: Optional[int] = None, seed: int = 0,
                  shell=None, slot: int = 0, tenant: Optional[str] = None,
-                 rid_base: int = 0):
+                 rid_base: int = 0, prefill_chunk: Optional[int] = None,
+                 admit_window: int = 8):
         assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
             "paged engine serves attention archs (DESIGN.md §5)"
         self.cfg = cfg
@@ -111,6 +119,30 @@ class ServingEngine:
         self.max_pages = -(-max_len // self.page)
         self.use_pallas = use_pallas
         self.pages_per_block = pages_per_block
+        # chunked/streaming prefill: prompts whose uncovered suffix
+        # exceeds ``prefill_chunk`` tokens are prefilled one chunk per
+        # step, interleaved with decode, instead of one giant padded
+        # forward that stalls every running row.  None = one-shot.
+        self.prefill_chunk = prefill_chunk
+        # head-of-line fix: how deep past a blocked queue head admission
+        # may scan for smaller requests that DO fit the page budget
+        # (per-tenant FIFO is always preserved)
+        self.admit_window = admit_window
+        # step-time EWMAs (SLO admission feasibility inputs): seconds
+        # per prefilled prompt token, and seconds per fused decode step.
+        # Samples are clamped against the running estimate so a JIT
+        # recompile outlier cannot wreck the feasibility math.
+        self.ewma_prefill_s_per_tok: Optional[float] = None
+        self.ewma_decode_step_s: Optional[float] = None
+        self.prefill_obs = 0
+        self.decode_obs = 0
+        self._ewma_alpha = 0.25
+        # gateway hooks: ``admission_hook(engine)`` runs at the top of
+        # every step (before ``_admit``) so a frontend can backfill the
+        # queue at step granularity; ``token_sink(req, token, done)``
+        # fires for every emitted token (prefill first-tokens included)
+        self.admission_hook = None
+        self.token_sink = None
         self.pools = make_pools(cfg, mmu.config.n_pages, self.page)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
@@ -136,6 +168,11 @@ class ServingEngine:
         self.dev_temps = jnp.zeros((max_batch,), jnp.float32)
         self.dev_topk = jnp.zeros((max_batch,), jnp.int32)
         self.dev_topp = jnp.ones((max_batch,), jnp.float32)
+        # per-slot sequence ids: sampling keys are counter-based
+        # fold_in(fold_in(rng, rid), token_index), so a request's
+        # sampled stream is invariant to admission order, chunking, and
+        # continuous-vs-wave scheduling (see sampler.fold_row_keys)
+        self.dev_rids = jnp.zeros((max_batch,), jnp.int32)
         self.rng = jax.random.PRNGKey(seed)
         # Optional shell binding: decode-step I/O is then submitted through
         # the slot's unified Port (Port API v2) into the shell scheduler
@@ -182,7 +219,8 @@ class ServingEngine:
     # -------------------------------------------------------------- API ----
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
                temperature: float = 0.0, top_k: int = 0,
-               top_p: float = 1.0, tid: int = 0) -> int:
+               top_p: float = 1.0, tid: int = 0, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
         if prompt and (min(prompt) < 0 or max(prompt) >= self.cfg.vocab_size):
             # out-of-range ids would embed as NaN (XLA gathers fill OOB
             # reads) and silently poison the KV cache; fail at the door
@@ -205,6 +243,7 @@ class ServingEngine:
         self.queue.append(Request(
             rid=rid, prompt=list(prompt), max_new_tokens=max_new_tokens,
             temperature=temperature, top_k=top_k, top_p=top_p, tid=tid,
+            priority=priority, deadline_s=deadline_s,
             t_submit=time.perf_counter()))
         return rid
 
@@ -216,44 +255,170 @@ class ServingEngine:
         return self.active > 0 or bool(self.queue)
 
     # -------------------------------------------------------- admission ----
+    def _ewma(self, prev: Optional[float], sample: float) -> float:
+        """EWMA update with a 10x clamp against the running estimate so
+        a one-off JIT-recompile outlier cannot poison feasibility math."""
+        if prev is None:
+            return sample
+        a = self._ewma_alpha
+        return (1 - a) * prev + a * min(sample, 10.0 * prev)
+
     def _admit(self) -> None:
-        admitted = []
-        for i in range(self.max_batch):
-            if self.slots[i] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            need = -(-(len(req.prompt) + req.max_new_tokens) // self.page)
+        """Admit queued requests into free slots under the page budget.
+
+        The queue head no longer blocks everything behind it: when a
+        request does not fit the remaining page credits, admission scans
+        up to ``admit_window`` entries deep for smaller requests that DO
+        fit, while skipping any request whose tenant (``tid``) already
+        has a blocked one ahead of it — per-tenant FIFO order is never
+        reordered, only independent tenants leapfrog a stuck head.
+        """
+        if not self.queue:
+            return
+        free = [i for i in range(self.max_batch) if self.slots[i] is None]
+        if not free:
+            return
+        oneshot, taken, blocked = [], set(), set()
+        qlist = list(self.queue)
+        for qi, req in enumerate(qlist):
+            if not free:
+                break
+            if blocked and qi >= self.admit_window:
+                break                  # bounded skip-ahead exhausted
+            if req.tid in blocked:
+                continue               # preserve per-tenant FIFO
+            plen = len(req.prompt)
+            need = -(-(plen + req.max_new_tokens) // self.page)
             # prefix-shared pages cost no new capacity: charge admission
             # credits only for the uncovered suffix
-            need -= self.mmu.probe_prefix(req.prompt) // self.page
+            probe = self.mmu.probe_prefix(req.prompt)
+            need -= probe // self.page
             if need > self.mmu.config.n_pages - (
                     self.mmu.utilization()["pages_used"]):
-                break                          # page credits exhausted
-            self.queue.popleft()
-            covered = self.mmu.alloc_seq(req.rid, len(req.prompt), slot=i,
-                                         prompt_tokens=req.prompt)
+                blocked.add(req.tid)   # page credits exhausted for this
+                continue               # size; try smaller ones behind it
+            i = free.pop(0)
+            # a row that will chunk-prefill must NOT publish its prompt
+            # pages into the prefix index yet: the pages exist at
+            # admission but their KV lands over later steps — a sharer
+            # admitted in between would read unwritten KV.  Publication
+            # happens when the final chunk lands (_prefill_chunks).
+            will_chunk = (self.prefill_chunk is not None
+                          and plen - probe > self.prefill_chunk)
+            covered = self.mmu.alloc_seq(req.rid, plen, slot=i,
+                                         prompt_tokens=req.prompt,
+                                         publish=not will_chunk)
             self.slots[i] = req
-            self.block_table.bind(i, req.rid)
-            admitted.append((i, req, covered))
-        if admitted:
-            self._prefill_batch(admitted)
+            taken.add(qi)
+            if will_chunk:
+                # long uncovered suffix: stream it chunk-by-chunk.  The
+                # row holds its slot + pages but stays UNBOUND from the
+                # decode batch until the final chunk samples its first
+                # token — decode steps keep running at full speed.
+                req.prefill_pos = covered
+                self.prefill_skipped += covered
+            else:
+                self.block_table.bind(i, req.rid)
+                qstart = covered if covered < plen else plen - 1
+                self.prefill_computed += plen - qstart
+                self.prefill_skipped += qstart
+                oneshot.append((i, req, qstart, covered))
+        if taken:
+            self.queue = deque(r for qi, r in enumerate(qlist)
+                               if qi not in taken)
+        if oneshot:
+            self._prefill_batch(oneshot)
 
-    def _prefill_batch(self, admitted) -> None:
-        """One padded forward for every request admitted in this pass.
+    def _prefill_chunks(self) -> None:
+        """Advance every chunk-prefilling row by ONE chunk.
 
-        ``admitted`` rows are (slot, request, covered) — ``covered`` is
-        the prompt-token count the MMU mapped onto shared prefix pages.
-        Every wave runs through ``prefill_shared_paged``: row j computes
-        only ``prompt[qstart:]`` (all of it at zero coverage; just the
-        last token's query when fully covered).  Using ONE kernel for
-        shared and unshared rows is what makes the sharing-on/off parity
-        bit-exact — a row's ops depend only on its own tokens, absolute
-        positions, and page bytes, so identical rows produce identical
-        tokens whatever the rest of the wave skipped.
+        Intermediate chunks run through ``prefill_chunk_paged`` (KV
+        writes only — no logits, no PRNG use), batched into one padded
+        forward.  Rows whose remaining suffix now fits a single chunk
+        take the normal ``_prefill_batch`` path, which samples their
+        first token and binds them into the decode batch — from then on
+        they are indistinguishable from one-shot admissions, which is
+        why chunked and one-shot token streams match token-for-token.
         """
-        n = len(admitted)
+        rows = [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.prefill_pos >= 0]
+        if not rows:
+            return
+        inter, finals = [], []
+        for i, req in rows:
+            if len(req.prompt) - req.prefill_pos <= self.prefill_chunk:
+                finals.append((i, req))
+            else:
+                inter.append((i, req))
+        if inter:
+            t0 = time.perf_counter()
+            n = len(inter)
+            nb = _bucket(n, self.max_batch)
+            chunk = self.prefill_chunk
+            smax = max(len(r.prompt) for _, r in inter)
+            maxp = max(self.max_pages,
+                       -(-_bucket(smax, 1 << 30) // self.page))
+            tables = np.full((nb, maxp), -1, np.int32)
+            tables[:n] = self.mmu.block_table(
+                [req.rid for _, req in inter], maxp)
+            q_starts = np.zeros((nb,), np.int32)
+            q_lens = np.zeros((nb,), np.int32)
+            tokens = np.zeros((nb, chunk), np.int32)
+            for j, (_, req, ) in enumerate(inter):
+                q_starts[j] = req.prefill_pos
+                q_lens[j] = chunk
+                tokens[j] = req.prompt[req.prefill_pos:
+                                       req.prefill_pos + chunk]
+            self.pools = prefill_chunk_paged(
+                self.params, self.pools, jnp.asarray(tokens),
+                jnp.asarray(q_lens), jnp.asarray(q_starts),
+                jnp.asarray(tables), cfg=self.cfg, page_size=self.page)
+            jax.block_until_ready(self.pools["k"])
+            n_tok = n * chunk
+            self.prefill_computed += n_tok
+            self.ewma_prefill_s_per_tok = self._ewma(
+                self.ewma_prefill_s_per_tok,
+                (time.perf_counter() - t0) / n_tok)
+            self.prefill_obs += 1
+            for _, req in inter:
+                req.prefill_pos += chunk
+        if finals:
+            batch = []
+            for i, req in finals:
+                self.block_table.bind(i, req.rid)
+                plen = len(req.prompt)
+                qstart = req.prefill_pos
+                self.prefill_computed += plen - qstart
+                # write_from == qstart: every earlier position was
+                # written by a previous chunk or a shared prefix page
+                batch.append((i, req, qstart, qstart))
+                req.prefill_pos = -1
+            self._prefill_batch(batch)
+            # every prompt position's KV is now resident: the deferred
+            # prefix-index publication (alloc_seq publish=False) is safe
+            for _, req in finals:
+                self.mmu.publish_prefix(req.rid, req.prompt)
+
+    def _prefill_batch(self, rows) -> None:
+        """One padded forward for a batch of prefill-finishing rows.
+
+        ``rows`` are (slot, request, qstart, write_from): row j computes
+        queries for ``prompt[qstart:]`` and scatters KV only at
+        positions >= ``write_from`` (shared prefix pages and
+        already-chunked positions are never rewritten).  One-shot
+        admissions pass qstart = coverage (or len-1 when fully covered);
+        final chunks pass qstart = write_from = their chunk cursor.
+        Using ONE kernel for shared, unshared, and chunked rows is what
+        makes the parity bit-exact — a row's ops depend only on its own
+        tokens, absolute positions, and page bytes, so identical rows
+        produce identical tokens whatever the rest of the wave skipped.
+        Prefill accounting (prefill_computed/skipped) is the CALLER's
+        job — chunked rows bill incrementally as chunks land.
+        """
+        t0 = time.perf_counter()
+        n = len(rows)
         nb = _bucket(n, self.max_batch)
-        smax = max(len(r.prompt) for _, r, _ in admitted)
+        smax = max(len(r.prompt) for _, r, _, _ in rows)
         # prompts may exceed max_len (such requests finish right after
         # prefill): size the prefill tables for the longest prompt
         maxp = max(self.max_pages, -(-_bucket(smax, 1 << 30) // self.page))
@@ -262,35 +427,38 @@ class ServingEngine:
         topps = np.ones((nb,), np.float32)
         tables = np.full((nb, maxp), -1, np.int32)
         tables[:n] = self.mmu.block_table(
-            [req.rid for _, req, _ in admitted], maxp)
+            [req.rid for _, req, _, _ in rows], maxp)
         q_starts = np.zeros((nb,), np.int32)
         q_lens = np.zeros((nb,), np.int32)
         write_from = np.zeros((nb,), np.int32)
-        for j, (_, req, cov) in enumerate(admitted):
+        for j, (_, req, qstart, wfrom) in enumerate(rows):
             temps[j] = req.temperature
             topks[j] = req.top_k
             topps[j] = req.top_p
-            plen = len(req.prompt)
-            qstart = cov if cov < plen else plen - 1
             q_starts[j] = qstart
-            q_lens[j] = plen - qstart
-            write_from[j] = cov
-            self.prefill_computed += plen - qstart
-            self.prefill_skipped += qstart
+            q_lens[j] = len(req.prompt) - qstart
+            write_from[j] = wfrom
         sb = _bucket(int(q_lens.max()), 1 << 30)
         tokens = np.zeros((nb, sb), np.int32)
-        for j, (_, req, _) in enumerate(admitted):
-            tokens[j, :q_lens[j]] = req.prompt[q_starts[j]:]
+        for j, (_, req, qstart, _) in enumerate(rows):
+            tokens[j, :q_lens[j]] = req.prompt[qstart:]
+        seq_ids = np.zeros((nb,), np.int32)
+        for j, (_, req, _, _) in enumerate(rows):
+            seq_ids[j] = req.rid
         first, self.pools, self.rng = prefill_shared_paged(
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(q_lens), jnp.asarray(q_starts),
             jnp.asarray(write_from), jnp.asarray(tables), self.rng,
             jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
-            cfg=self.cfg, page_size=self.page)
+            jnp.asarray(seq_ids), cfg=self.cfg, page_size=self.page)
         first = np.asarray(first)
         now = time.perf_counter()
-        slots_i, rows = [], []
-        for j, (i, req, _) in enumerate(admitted):
+        self.ewma_prefill_s_per_tok = self._ewma(
+            self.ewma_prefill_s_per_tok,
+            (now - t0) / max(int(q_lens.sum()), 1))
+        self.prefill_obs += 1
+        slots_i, srows = [], []
+        for j, (i, req, _, _) in enumerate(rows):
             tok = int(first[j])
             req.out_tokens.append(tok)
             req.t_first_token = now
@@ -304,20 +472,27 @@ class ServingEngine:
                 self.block_table.unbind(i)
                 self.completed.append(req)
                 self.slots[i] = None
+                if self.token_sink is not None:
+                    self.token_sink(req, tok, True)
                 continue
+            if self.token_sink is not None:
+                self.token_sink(req, tok, False)
             slots_i.append(i)
             # write position of the NEXT decode step's token
-            rows.append((len(req.prompt), tok, req.temperature,
-                         req.top_k, req.top_p))
+            srows.append((len(req.prompt), tok, req.temperature,
+                          req.top_k, req.top_p, req.rid))
         if slots_i:
-            self._sync_slot_state(slots_i, rows)
+            self._sync_slot_state(slots_i, srows)
 
     def _sync_slot_state(self, slots_i, rows) -> None:
         """Push slot-transition deltas into the device-resident state
         (admissions and frees only — never on the per-step path).
-        ``rows`` is a list of (len, token, temperature, top_k, top_p)."""
+        ``rows`` is a list of (len, token, temperature, top_k, top_p,
+        rid)."""
         idx = jnp.asarray(slots_i, jnp.int32)
-        lens, toks, temps, topks, topps = zip(*rows)
+        lens, toks, temps, topks, topps, rids = zip(*rows)
+        self.dev_rids = self.dev_rids.at[idx].set(
+            jnp.asarray(rids, jnp.int32))
         self.dev_lens = self.dev_lens.at[idx].set(
             jnp.asarray(lens, jnp.int32))
         self.dev_tokens = self.dev_tokens.at[idx].set(
@@ -361,16 +536,25 @@ class ServingEngine:
             if health is not None:
                 health.beat(self.slot)      # watchdog: slot is decoding
         self._settle_io()
+        if self.admission_hook is not None:
+            self.admission_hook(self)
         self._admit()
-        if self.active == 0:
+        self._prefill_chunks()
+        # decode runs over BOUND rows only: chunk-prefilling rows hold a
+        # slot + pages but emit nothing until their final chunk lands
+        live = [i for i, r in enumerate(self.slots)
+                if r is not None and r.prefill_pos < 0]
+        if not live:
             return 0
+        t0 = time.perf_counter()
         tables = self.block_table.device_view()
         # rows whose mapping changed (page crossing, eviction, fault-back)
         # re-sync lens/tokens from host truth, so device state can never
         # drift from the MMU even when a live row loses a page under
         # pressure.  Steady-state steps see no updated rows and skip this.
         upd = [i for i in self.block_table.last_updated_rows
-               if self.slots[i] is not None]
+               if self.slots[i] is not None
+               and self.slots[i].prefill_pos < 0]
         if upd:
             self._sync_slot_state(
                 upd,
@@ -379,26 +563,29 @@ class ServingEngine:
                   self.slots[i].out_tokens[-1],
                   self.slots[i].temperature,
                   self.slots[i].top_k,
-                  self.slots[i].top_p) for i in upd])
+                  self.slots[i].top_p,
+                  self.slots[i].rid) for i in upd])
         next_toks, self.pools, self.dev_lens, self.rng = decode_step_paged(
             self.params, self.pools, tables, self.dev_lens,
             self.dev_tokens, self.rng, self.dev_temps, self.dev_topk,
-            self.dev_topp, cfg=self.cfg,
+            self.dev_topp, self.dev_rids, cfg=self.cfg,
             page_size=self.page, use_pallas=self.use_pallas,
             pages_per_block=self.pages_per_block)
         self.dev_tokens = next_toks
         # the ONLY per-step device->host sync: the (B,) int32 token vector
         toks = np.asarray(next_toks)
+        self.ewma_decode_step_s = self._ewma(
+            self.ewma_decode_step_s, time.perf_counter() - t0)
+        self.decode_obs += 1
         self.steps += 1
-        n_live = self.active
-        self._submit_step_io(n_live=n_live)
+        self._submit_step_io(n_live=len(live))
 
         emitted = 0
         freed = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            req.out_tokens.append(int(toks[i]))
+        for i in live:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.out_tokens.append(tok)
             emitted += 1
             self.mmu.extend_seq(req.rid, 1, slot=i)
             total = len(req.prompt) + len(req.out_tokens)
@@ -411,8 +598,10 @@ class ServingEngine:
                 self.completed.append(req)
                 self.slots[i] = None
                 freed.append(i)
+            if self.token_sink is not None:
+                self.token_sink(req, tok, req.done)
         if freed:
-            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0)] * len(freed))
+            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0, 0)] * len(freed))
         self.tokens_out += emitted
         return emitted
 
@@ -487,17 +676,23 @@ class ServingEngine:
                 "max_new_tokens": req.max_new_tokens,
                 "temperature": float(req.temperature),
                 "top_k": int(req.top_k), "top_p": float(req.top_p),
-                "tid": req.tid, "out_tokens": list(req.out_tokens),
+                "tid": req.tid, "priority": int(req.priority),
+                "deadline_s": (None if req.deadline_s is None
+                               else float(req.deadline_s)),
+                "out_tokens": list(req.out_tokens),
                 "t_submit": float(req.t_submit),
                 "t_first_token": float(req.t_first_token)}
 
     @staticmethod
     def _req_from_dict(d: Dict) -> Request:
+        dl = d.get("deadline_s")
         return Request(rid=int(d["rid"]), prompt=list(d["prompt"]),
                        max_new_tokens=int(d["max_new_tokens"]),
                        temperature=float(d["temperature"]),
                        top_k=int(d["top_k"]), top_p=float(d["top_p"]),
                        tid=int(d["tid"]),
+                       priority=int(d.get("priority", 0)),
+                       deadline_s=None if dl is None else float(dl),
                        out_tokens=list(d["out_tokens"]),
                        t_submit=float(d["t_submit"]),
                        t_first_token=float(d["t_first_token"]))
@@ -522,8 +717,16 @@ class ServingEngine:
         concurrent ``step()``.  Nothing here is pickled — the pair feeds
         ``repro.core.bitstream.encode("migration", ...)`` directly.
         """
+        # rows still mid-chunk-prefill (no sampled token yet) are demoted
+        # back to the queue: their partial KV is cheap to recompute and
+        # carries no sampled state, so the destination just re-prefills —
+        # token streams are unaffected (prefill is deterministic and the
+        # PRNG is untouched until the first sample)
         reqs = [{"slot": i, **self._req_to_dict(r)}
-                for i, r in enumerate(self.slots) if r is not None]
+                for i, r in enumerate(self.slots)
+                if r is not None and r.prefill_pos < 0]
+        demoted = [r for r in self.slots
+                   if r is not None and r.prefill_pos >= 0]
         seq_ids = [r["rid"] for r in reqs]
         mmu_snap = self.mmu.snapshot_seqs(seq_ids)
         # dedupe: each physical page (device ppage / host slot) ships
@@ -551,7 +754,8 @@ class ServingEngine:
         header = {
             "geometry": self.geometry(),
             "requests": reqs,
-            "queue": [self._req_to_dict(r) for r in self.queue],
+            "queue": [self._req_to_dict(r)
+                      for r in list(demoted) + list(self.queue)],
             "mmu": mmu_snap,
             "pages": pages,          # gather order of kv_k/kv_v rows
         }
@@ -630,7 +834,7 @@ class ServingEngine:
             slots_i.append(i)
             rows.append((len(req.prompt) + len(req.out_tokens) - 1,
                          req.out_tokens[-1], req.temperature,
-                         req.top_k, req.top_p))
+                         req.top_k, req.top_p, req.rid))
         if slots_i:
             self._sync_slot_state(slots_i, rows)
         for rd in header["queue"]:
@@ -659,6 +863,7 @@ class ServingEngine:
         self.dev_temps = jnp.zeros((self.max_batch,), jnp.float32)
         self.dev_topk = jnp.zeros((self.max_batch,), jnp.int32)
         self.dev_topp = jnp.ones((self.max_batch,), jnp.float32)
+        self.dev_rids = jnp.zeros((self.max_batch,), jnp.int32)
         self._io_futs = []
         self.mmu.tlb.invalidate()
 
@@ -676,10 +881,35 @@ class ServingEngine:
                 freed.append(i)
                 n_seqs += 1
         if freed:
-            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0)] * len(freed))
+            self._sync_slot_state(freed, [(0, 0, 0.0, 0, 1.0, 0)] * len(freed))
         n_q = len(self.queue)
         self.queue.clear()
         return {"seqs": n_seqs, "queued": n_q}
+
+    def latency_stats(self) -> Dict[str, float]:
+        """TTFT/TPOT percentiles over completed requests (milliseconds).
+
+        TTFT = first sampled token's wall time minus ``t_submit``;
+        TPOT = mean seconds per decode token after the first.  Both were
+        always recorded per request (``t_submit``/``t_first_token``/
+        ``t_done``) — this aggregates them into the p50/p99 view every
+        serving paper quotes.
+        """
+        ttfts, tpots = [], []
+        for r in self.completed:
+            if r.t_first_token > 0 and r.t_submit > 0:
+                ttfts.append(r.t_first_token - r.t_submit)
+            n_dec = len(r.out_tokens) - 1
+            if r.t_done > 0 and r.t_first_token > 0 and n_dec > 0:
+                tpots.append((r.t_done - r.t_first_token) / n_dec)
+        out: Dict[str, float] = {}
+        if ttfts:
+            out["ttft_p50_ms"] = float(np.percentile(ttfts, 50) * 1e3)
+            out["ttft_p99_ms"] = float(np.percentile(ttfts, 99) * 1e3)
+        if tpots:
+            out["tpot_p50_ms"] = float(np.percentile(tpots, 50) * 1e3)
+            out["tpot_p99_ms"] = float(np.percentile(tpots, 99) * 1e3)
+        return out
 
     def run(self, max_steps: int = 10_000) -> Dict[str, float]:
         t0 = time.perf_counter()
@@ -698,6 +928,7 @@ class ServingEngine:
                  "completed": len(self.completed),
                  "prefill_computed": self.prefill_computed,
                  "prefill_skipped": self.prefill_skipped}
+        stats.update(self.latency_stats())
         if self.shell is not None and self.tenant is not None:
             stats["io_drained"] = drained
             stats["io_pending"] = self.shell.scheduler.tenant_pending(

@@ -44,7 +44,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels.paged_attention.ops import paged_decode
 from repro.models import attention, layers, mlp, moe
 from repro.models.transformer import _is_moe_layer, forward, lm_logits
-from repro.serve.sampler import sample_per_row
+from repro.serve.sampler import fold_row_keys, sample_per_row
 
 # Trace-time counters, keyed by function name.  Incremented as a Python
 # side effect while tracing, so a test (or an operator) can assert that a
@@ -174,7 +174,7 @@ def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
                    donate_argnames=("pools", "rng"))
 def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
                          write_from, tables, rng, temperatures,
-                         top_k=None, top_p=None,
+                         top_k=None, top_p=None, seq_ids=None,
                          *, cfg: ModelConfig, page_size: int):
     """Suffix prefill for prefix-shared admissions.
 
@@ -202,6 +202,12 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
     Returns (first_tokens (N,) int32, new_pools, new_rng); ``pools`` and
     ``rng`` are donated.  Retraces per (N, T, maxp) bucket — admission
     is the cold path, so this mirrors ``prefill_paged``'s bucketing.
+
+    ``seq_ids`` (N,) int32, optional: when given, sampling keys are
+    counter-based — ``fold_in(fold_in(rng, seq_id), prompt_len)`` per
+    row instead of one batch-wide split — so a request's first token is
+    identical however admission batched or chunked its prefill, and
+    ``rng`` passes through unconsumed.
     """
     _count_trace("prefill_shared_paged")
     n, t = tokens.shape
@@ -271,9 +277,101 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
     x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
     last = x[jnp.arange(n), jnp.maximum(q_lens - 1, 0)]     # (N,D)
     logits = lm_logits(params, cfg, last)[..., :cfg.vocab_size]
-    rng, sub = jax.random.split(rng)
+    if seq_ids is None:
+        rng, sub = jax.random.split(rng)
+    else:
+        # kv_lens == full prompt length == index of the token sampled
+        sub = fold_row_keys(rng, seq_ids, kv_lens)
     first = sample_per_row(sub, logits, temperatures, top_k, top_p)
     return first, {"k": kpool, "v": vpool}, rng
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnames=("pools",))
+def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
+                        *, cfg: ModelConfig, page_size: int):
+    """One INTERMEDIATE chunk of a streaming prefill: KV only, no logits.
+
+    The chunked-prefill twin of :func:`prefill_shared_paged`: row i runs
+    the transformer over ``prompt[q_starts[i] : q_starts[i]+q_lens[i]]``,
+    attending through the block tables (so chunk queries see every
+    earlier chunk's KV in the pools), and scatters the chunk's KV at its
+    absolute positions.  Because an intermediate chunk emits no token it
+    computes NO final norm, NO logits, and — critically — consumes NO
+    PRNG: the engine's rng key advances exactly as many times under
+    chunked prefill as under one-shot prefill, which is what makes
+    chunked/one-shot token streams identical even for sampled requests.
+
+    Positions below ``q_starts`` are never written (they belong to
+    earlier chunks or to shared prefix pages), so interleaving chunks
+    with decode steps can only append — a 2k-token prompt stops costing
+    one giant padded forward that stalls every running row.
+
+    Returns ``new_pools`` only; ``pools`` is donated.  Retraces per
+    (N, T, maxp) bucket like the other prefill entry points — chunk
+    sizes are engine-fixed, so the bucket set stays O(log) small.
+    """
+    _count_trace("prefill_chunk_paged")
+    n, t = tokens.shape
+    maxp = tables.shape[1]
+    n_flat = pools["k"].shape[0]
+    n_pages = n_flat // cfg.n_layers
+    kh = cfg.n_kv_heads
+    g = cfg.n_heads // kh
+    scale = cfg.resolved_head_dim ** -0.5
+    pos = q_starts[:, None] + jnp.arange(t)[None, :]        # (N,T) absolute
+    qvalid = jnp.arange(t)[None, :] < q_lens[:, None]
+    kv_lens = q_starts + q_lens                  # tokens in cache after us
+    vpage = jnp.minimum(pos // page_size, maxp - 1)
+    off = pos % page_size
+    ppage = jnp.take_along_axis(tables, vpage, axis=1)      # (N,T)
+    wvalid = qvalid & (ppage >= 0)
+    kpos = jnp.arange(maxp * page_size)[None]               # (1,S)
+    page_ok = jnp.repeat(tables >= 0, page_size, axis=1)    # (N,S)
+    kv_ok = (kpos < kv_lens[:, None]) & page_ok             # (N,S)
+
+    x = layers.embed_lookup(params["embed"], tokens)        # (N,T,D)
+
+    def body(carry, inp):
+        x, kp, vp = carry
+        li, lp = inp
+        base = li * n_pages
+        h = layers.norm_apply(lp["norm1"], x, cfg.norm_eps)
+        q, k, v = attention.qkv_proj(lp["attn"], cfg, h)
+        if cfg.pos_embed == "rope":
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        drop_page = jnp.where(wvalid, base + ppage, n_flat)
+        kp = kp.at[drop_page, off].set(k.astype(kp.dtype), mode="drop")
+        vp = vp.at[drop_page, off].set(v.astype(vp.dtype), mode="drop")
+        safe = jnp.maximum(tables, 0) + base
+        kg = jnp.take(kp, safe.reshape(-1), axis=0).reshape(
+            n, maxp * page_size, kh, -1)
+        vg = jnp.take(vp, safe.reshape(-1), axis=0).reshape(
+            n, maxp * page_size, kh, -1)
+        qf = q.reshape(n, t, kh, g, -1).astype(jnp.float32)
+        s = jnp.einsum("ntkgd,nskd->nkgts", qf,
+                       kg.astype(jnp.float32)) * scale
+        mask = kv_ok[:, None, :] & (kpos[:, None, :] <= pos[:, :, None])
+        s = jnp.where(mask[:, None, None], s, attention.NEG_INF)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        att = jnp.einsum("nkgts,nskd->ntkgd", p, vg.astype(jnp.float32))
+        any_ok = jnp.any(mask, axis=-1)                     # (N,T)
+        att = jnp.where(any_ok[:, :, None, None, None], att, 0.0)
+        att = att.reshape(n, t, cfg.n_heads, -1).astype(x.dtype)
+        x = x + attention.out_proj(lp["attn"], cfg, att)
+        h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
+        if _is_moe_layer(cfg):
+            out, _ = moe.moe_apply(lp["ffn"], cfg, h)
+        else:
+            out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        return (x + out, kp, vp), None
+
+    (_, kpool, vpool), _ = jax.lax.scan(
+        body, (x, pools["k"], pools["v"]),
+        (jnp.arange(cfg.n_layers), params["layers"]))
+    return {"k": kpool, "v": vpool}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size",
@@ -281,7 +379,7 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
                                              "pages_per_block"),
                    donate_argnames=("pools", "lens", "last_tokens", "rng"))
 def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
-                      temperatures, top_k=None, top_p=None,
+                      temperatures, top_k=None, top_p=None, seq_ids=None,
                       *, cfg: ModelConfig, page_size: int,
                       use_pallas: bool = False,
                       pages_per_block: Optional[int] = None):
@@ -345,7 +443,12 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
         (jnp.arange(cfg.n_layers), params["layers"]))
     x = layers.norm_apply(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params, cfg, x)[:, 0][..., :cfg.vocab_size]
-    rng, sub = jax.random.split(rng)
+    if seq_ids is None:
+        rng, sub = jax.random.split(rng)
+    else:
+        # lens + 1 == index of the token being sampled: counter-based
+        # keys make the draw independent of batching/step interleave
+        sub = fold_row_keys(rng, seq_ids, lens + 1)
     # sample every row (the host ignores empty slots): a live row whose
     # write-position page was evicted still emits a real (degraded)
     # sample, matching the host-side oracle's behaviour under pressure.

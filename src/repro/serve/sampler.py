@@ -69,6 +69,20 @@ def _filter_per_row(z, top_k, top_p):
     return jnp.where(z < cutoff, -jnp.inf, z)
 
 
+def fold_row_keys(rng, seq_ids, positions):
+    """Counter-based per-row sampling keys: fold (seq_id, position) into
+    a fixed base key.  A row's draw then depends only on its identity
+    and the index of the token being sampled — NOT on how admission,
+    chunked prefill, or continuous batching happened to interleave the
+    batch.  This is what makes chunked/one-shot prefill and
+    continuous/wave schedules sample token-for-token identical streams
+    (and makes migration/recovery parity independent of step counts)."""
+    def one(sid, p):
+        return jax.random.fold_in(jax.random.fold_in(rng, sid), p)
+    return jax.vmap(one)(jnp.asarray(seq_ids, jnp.int32),
+                         jnp.asarray(positions, jnp.int32))
+
+
 def sample_per_row(rng, logits, temperatures, top_k=None, top_p=None):
     """Fused per-row sampling for the device-resident decode hot path.
 
@@ -79,6 +93,9 @@ def sample_per_row(rng, logits, temperatures, top_k=None, top_p=None):
     top_p (B,) float (>= 1 = disabled).  The filter pass (a per-row sort)
     runs under ``lax.cond`` so batches with every filter disabled — the
     greedy/temperature steady state — never pay for it.
+    ``rng`` is either ONE key (shared Gumbel field across the batch) or
+    a (B,)-batch of per-row keys from :func:`fold_row_keys` (each row
+    draws its own field — schedule-independent sampling).
     Returns (B,) int32.  Not jitted on its own: it is traced inside
     ``decode_step_paged``/``prefill_paged`` so logits never leave the
     device and the PRNG key stays device-resident.
@@ -96,7 +113,11 @@ def sample_per_row(rng, logits, temperatures, top_k=None, top_p=None):
         z = jax.lax.cond(enabled,
                          lambda zz: _filter_per_row(zz, tk, tp),
                          lambda zz: zz, z)
-    g = jax.random.gumbel(rng, logits.shape, jnp.float32)
+    if jnp.ndim(rng) == 2:      # (B,)-batch of per-row keys
+        g = jax.vmap(lambda k: jax.random.gumbel(
+            k, logits.shape[-1:], jnp.float32))(rng)
+    else:
+        g = jax.random.gumbel(rng, logits.shape, jnp.float32)
     noisy = jnp.argmax(jnp.where(jnp.isfinite(z), z + g, -jnp.inf),
                        axis=-1).astype(jnp.int32)
     return jnp.where(temperatures > 0, noisy, greedy)

@@ -1,0 +1,397 @@
+"""Serving gateway + chunked prefill: open-arrival frontend contracts.
+
+Pins the PR's three load-bearing claims end to end:
+
+  * **Chunked-prefill parity.**  Splitting a long prompt's prefill into
+    fixed-size chunks interleaved with decode changes WHEN compute runs,
+    never WHAT it computes: token streams are identical to one-shot
+    prefill for any chunk size, greedy AND sampled, prefix sharing on
+    and off (counter-based sampling keys make the streams scheduling-
+    invariant).
+  * **Admission control.**  Head-of-line fix (bounded skip-ahead that
+    preserves per-tenant FIFO), SLO feasibility rejection, queued-
+    deadline expiry, deadline-driven priority aging, and GATEWAY_FULL
+    backpressure — all typed, all observable in counters.
+  * **Exactly-once streams.**  Every accepted request completes exactly
+    once with the same tokens a direct engine run would produce; every
+    rejected/expired request carries a typed error; nothing is lost or
+    duplicated under churn.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Shell, ShellConfig
+from repro.core.faults import FaultKind
+from repro.core.port import Invocation, PortError
+from repro.core.services import MMUConfig
+from repro.core.services.mmu import MMU
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+from repro.serve.gateway import ServingGateway
+
+PAGE = 16
+POOL = 128
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=7):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, size=n).tolist() for n in lens]
+
+
+def _engine(cfg, params, *, max_batch=4, max_len=512, seed=3,
+            prefill_chunk=None, n_pages=256, page=16, sharing=True,
+            **kw):
+    mmu = MMU(MMUConfig(page_size=page, n_pages=n_pages,
+                        prefix_sharing=sharing))
+    return ServingEngine(cfg, params, mmu, max_batch=max_batch,
+                         max_len=max_len, seed=seed,
+                         prefill_chunk=prefill_chunk, **kw)
+
+
+def _run(cfg, params, prompts, *, chunk, temp, sharing=True, new=10):
+    eng = _engine(cfg, params, prefill_chunk=chunk, sharing=sharing)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=new, temperature=temp,
+                   top_k=5 if temp else 0)
+    eng.run()
+    return ({r.rid: r.out_tokens for r in eng.completed},
+            eng.prefill_computed + eng.prefill_skipped,
+            eng.prefill_skipped)
+
+
+# =========================================== chunked-prefill parity ========
+@pytest.mark.parametrize("temp", [0.0, 0.8])
+def test_chunked_prefill_token_parity_any_chunk_size(served, temp):
+    """Chunked == one-shot, token for token, greedy and sampled — the
+    counter-based sampling keys make streams invariant to how prefill
+    is scheduled.  Prompt tokens processed must also balance exactly."""
+    cfg, params = served
+    prompts = _prompts(cfg, (97, 5, 33, 160, 12))
+    base, base_total, _ = _run(cfg, params, prompts, chunk=None, temp=temp)
+    assert len(base) == len(prompts)
+    for chunk in (8, 32, 64):
+        got, total, _ = _run(cfg, params, prompts, chunk=chunk, temp=temp)
+        assert got == base, f"chunk={chunk} temp={temp} diverged"
+        assert total == base_total, "prefill token accounting drifted"
+
+
+@pytest.mark.parametrize("sharing", [True, False])
+def test_chunked_prefill_parity_with_prefix_sharing(served, sharing):
+    """Same token contract when prompts share a long prefix, sharing on
+    and off.  (A chunking row defers its prefix-index publication, so a
+    co-admitted sharer computes its own prefix rather than reading
+    unwritten KV — tokens must still match one-shot exactly.)"""
+    cfg, params = served
+    rng = np.random.RandomState(11)
+    prefix = rng.randint(0, cfg.vocab_size, size=64).tolist()
+    tails = [rng.randint(0, cfg.vocab_size, size=n).tolist()
+             for n in (40, 5, 23)]
+    prompts = [prefix + t for t in tails]
+    base, _, base_skip = _run(cfg, params, prompts, chunk=None, temp=0.8,
+                              sharing=sharing, new=8)
+    got, _, _ = _run(cfg, params, prompts, chunk=16, temp=0.8,
+                     sharing=sharing, new=8)
+    assert got == base
+    assert (base_skip > 0) == sharing, \
+        "one-shot admission must share the prefix iff sharing is on"
+
+
+def test_chunked_rows_publish_prefix_only_after_final_chunk(served):
+    """The safety half of chunked prefill x prefix sharing: a chunking
+    row's prompt pages are not canonical while its KV is still landing
+    (mid-chunk sharers would read garbage), and become shareable the
+    moment the final chunk completes."""
+    cfg, params = served
+    eng = _engine(cfg, params, prefill_chunk=16)
+    rng = np.random.RandomState(17)
+    prefix = rng.randint(0, cfg.vocab_size, size=64).tolist()
+    eng.submit(prefix + rng.randint(0, cfg.vocab_size, size=40).tolist(),
+               max_new_tokens=16)
+    eng.step()
+    assert any(r is not None and r.prefill_pos >= 0 for r in eng.slots)
+    assert eng.mmu.probe_prefix(prefix) == 0      # mid-chunk: unpublished
+    for _ in range(20):
+        eng.step()
+        if not any(r is not None and r.prefill_pos >= 0
+                   for r in eng.slots):
+            break
+    assert eng.mmu.probe_prefix(prefix) == 64     # final chunk: canonical
+    skipped = eng.prefill_skipped
+    eng.submit(prefix + rng.randint(0, cfg.vocab_size, size=5).tolist(),
+               max_new_tokens=2)
+    eng.step()                                    # late sharer maps it
+    assert eng.prefill_skipped >= skipped + 64
+    eng.run()
+
+
+# ================================================ head-of-line fix =========
+def _tiny_engine(cfg, params, **kw):
+    # 8 pages x 4 tokens = 32-token budget: a 20+16 request can never fit
+    return _engine(cfg, params, max_batch=2, max_len=64, page=4,
+                   n_pages=8, **kw)
+
+
+def test_admit_skips_blocked_head_for_fitting_request(served):
+    """A request too big for the page budget no longer starves everyone
+    behind it: admission scans past the stuck head and admits a smaller
+    request from another tenant."""
+    cfg, params = served
+    eng = _tiny_engine(cfg, params)
+    big = eng.submit(list(range(3, 23)), max_new_tokens=16, tid=0)
+    small = eng.submit(list(range(3, 7)), max_new_tokens=8, tid=1)
+    eng.step()
+    live = {r.rid for r in eng.slots if r is not None}
+    assert small in live and big not in live
+    assert [r.rid for r in eng.queue] == [big]
+
+
+def test_admit_skip_ahead_preserves_per_tenant_fifo(served):
+    """Skip-ahead never reorders one tenant's own stream: a small
+    request behind its tenant's blocked head waits; an independent
+    tenant leapfrogs."""
+    cfg, params = served
+    eng = _tiny_engine(cfg, params)
+    big0 = eng.submit(list(range(3, 23)), max_new_tokens=16, tid=0)
+    small0 = eng.submit(list(range(3, 7)), max_new_tokens=8, tid=0)
+    small1 = eng.submit(list(range(3, 7)), max_new_tokens=8, tid=1)
+    eng.step()
+    live = {r.rid for r in eng.slots if r is not None}
+    assert small1 in live
+    assert big0 not in live and small0 not in live
+    assert [r.rid for r in eng.queue] == [big0, small0]
+
+
+def test_admit_window_bounds_the_skip_ahead(served):
+    """admit_window=1: once the head blocks, nothing deeper is scanned
+    — the fix is bounded, not an unbounded reorder."""
+    cfg, params = served
+    eng = _tiny_engine(cfg, params, admit_window=1)
+    eng.submit(list(range(3, 23)), max_new_tokens=16, tid=0)
+    eng.submit(list(range(3, 7)), max_new_tokens=2, tid=1)
+    eng.step()
+    assert eng.active == 0 and len(eng.queue) == 2
+
+
+# =========================================== engine latency stats ==========
+def test_engine_run_reports_ttft_tpot_percentiles(served):
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=2, max_len=128)
+    for p in _prompts(cfg, (9, 17)):
+        eng.submit(p, max_new_tokens=4)
+    stats = eng.run()
+    for key in ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms",
+                "tpot_p99_ms"):
+        assert stats[key] > 0.0
+    assert stats["ttft_p99_ms"] >= stats["ttft_p50_ms"]
+
+
+# ================================================== gateway streams ========
+def test_gateway_streams_match_direct_engine_exactly_once(served):
+    """Oracle parity: the gateway's continuous backfill over a 2-slot
+    engine produces byte-identical sampled streams to a direct 4-slot
+    engine run — and every stream completes exactly once."""
+    cfg, params = served
+    prompts = _prompts(cfg, (41, 7, 19, 64, 11), seed=13)
+    ref_eng = _engine(cfg, params, seed=5)
+    for p in prompts:
+        ref_eng.submit(p, max_new_tokens=8, temperature=0.8, top_k=5)
+    ref_eng.run()
+    ref = [r.out_tokens for r in sorted(ref_eng.completed,
+                                        key=lambda r: r.rid)]
+
+    eng = _engine(cfg, params, max_batch=2, seed=5)
+    gw = ServingGateway(eng, mode="continuous", admission="fifo")
+    streams = [gw.submit(p, max_new_tokens=8, temperature=0.8, top_k=5)
+               for p in prompts]
+    gw.drain()
+    got = [s.tokens for s in sorted(gw.completed, key=lambda s: s.gid)]
+    assert got == ref
+    # exactly-once: every stream done, none duplicated, sink drained
+    assert [s.gid for s in sorted(streams, key=lambda s: s.gid)] \
+        == sorted(s.gid for s in gw.completed)
+    assert all(s.done and s.error is None for s in streams)
+    assert not gw.streams and not gw.queue
+    st = gw.stats()
+    assert st["completed"] == st["dispatched"] == len(prompts)
+    assert st["goodput"] > 0 and st["ttft_p99_ms"] >= st["ttft_p50_ms"]
+    assert st["tpot_p50_ms"] > 0
+
+
+def test_continuous_backfills_while_wave_waits_for_drain(served):
+    """The A/B the benchmark measures: continuous mode dispatches a
+    queued arrival while a long request still runs; wave mode holds it
+    until the engine fully drains."""
+    cfg, params = served
+
+    def dispatch_overlap(mode):
+        eng = _engine(cfg, params, max_batch=2, max_len=128, seed=0)
+        gw = ServingGateway(eng, mode=mode, admission="fifo")
+        gw.submit(list(range(3, 9)), max_new_tokens=2)
+        long = gw.submit(list(range(3, 12)), max_new_tokens=24)
+        third = gw.submit(list(range(3, 7)), max_new_tokens=2)
+        for _ in range(200):
+            gw.step()
+            if third.rid is not None:
+                break
+        overlap = not long.done
+        gw.drain()
+        assert third.done and long.done
+        return overlap
+
+    assert dispatch_overlap("continuous") is True
+    assert dispatch_overlap("wave") is False
+
+
+# ================================================ SLO admission ============
+def test_slo_infeasible_deadline_rejected_at_the_door(served):
+    """Once the timing model is warm, a deadline below the best-case
+    service estimate rejects immediately with a typed, non-retryable
+    PortError — no page credits burned on a guaranteed miss."""
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=2, max_len=128)
+    gw = ServingGateway(eng, min_obs=1)
+    for p in _prompts(cfg, (9, 13)):
+        gw.submit(p, max_new_tokens=4)
+    gw.drain()
+    assert gw._service_estimate(32, 8) is not None     # model is warm
+    with pytest.raises(PortError) as ei:
+        gw.submit(list(range(3, 35)), max_new_tokens=8, deadline_s=1e-6)
+    assert ei.value.kind == FaultKind.SLO_INFEASIBLE
+    assert not ei.value.retryable
+    assert gw.rejected_infeasible == 1
+    assert gw.rejected[-1].error is ei.value
+    assert gw.stats()["rejected_infeasible"] == 1
+
+
+def test_queued_request_expires_past_its_deadline(served):
+    """A request whose deadline passes while queued is expired before
+    it wastes a prefill: typed SLO_EXPIRED error, never dispatched."""
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=2, max_len=128)
+    gw = ServingGateway(eng)            # cold EWMAs: door check skipped
+    s = gw.submit(list(range(3, 12)), max_new_tokens=4, deadline_s=0.01)
+    time.sleep(0.02)
+    gw.step()
+    assert s.rejected and s.error.kind == FaultKind.SLO_EXPIRED
+    assert s.rid is None and not s.done
+    assert gw.expired == 1 and not gw.queue
+
+
+def test_priority_ages_as_deadline_approaches(served):
+    """Inside the aging window a deadlined request's effective priority
+    grows (bounded by aging_max) and it leapfrogs earlier no-deadline
+    arrivals in dispatch order."""
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=1, max_len=128)
+    gw = ServingGateway(eng, aging_window_s=10.0, aging_max=4)
+    lo = gw.submit(list(range(3, 9)), max_new_tokens=2)
+    hot = gw.submit(list(range(3, 10)), max_new_tokens=2, deadline_s=5.0)
+    gw.step()
+    assert hot.eff_priority > hot.priority
+    assert hot.eff_priority <= hot.priority + 4
+    assert hot.rid is not None and lo.rid is None     # aged ahead
+    gw.drain()
+    assert lo.done and hot.done
+
+
+def test_gateway_full_backpressure_is_typed_and_retryable(served):
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=2, max_len=128)
+    gw = ServingGateway(eng, max_queue=1)
+    s1 = gw.submit(list(range(3, 8)), max_new_tokens=2)
+    with pytest.raises(PortError) as ei:
+        gw.submit(list(range(3, 8)), max_new_tokens=2)
+    assert ei.value.kind == FaultKind.GATEWAY_FULL and ei.value.retryable
+    assert gw.rejected_full == 1
+    gw.drain()
+    assert s1.done and len(gw.completed) == 1
+
+
+def test_nothing_lost_or_duplicated_under_slo_churn(served):
+    """Accounting identity under mixed accept/expire/complete traffic:
+    submitted == completed + expired, each exactly once, completed
+    streams carry their full token budget."""
+    cfg, params = served
+    eng = _engine(cfg, params, max_batch=2, max_len=128)
+    gw = ServingGateway(eng)
+    ok = [gw.submit(p, max_new_tokens=4, priority=pr)
+          for pr, p in enumerate(_prompts(cfg, (9, 21, 13), seed=23))]
+    dead = gw.submit(list(range(3, 9)), max_new_tokens=4,
+                     deadline_s=0.005)
+    time.sleep(0.01)
+    gw.drain()
+    assert dead.rejected and dead.error.kind == FaultKind.SLO_EXPIRED
+    assert all(s.done and len(s.tokens) == 4 for s in ok)
+    gids = sorted(s.gid for s in gw.completed) \
+        + sorted(s.gid for s in gw.rejected)
+    assert sorted(gids) == list(range(gw.submitted))
+    st = gw.stats()
+    assert st["submitted"] == st["completed"] + st["expired"]
+    assert st["queued"] == 0 and not gw.streams
+
+
+# ============================================ shell-bound front door =======
+def _shell():
+    s = Shell(ShellConfig.make(
+        services={"mmu": MMUConfig(page_size=PAGE, n_pages=POOL)},
+        n_vfpgas=2))
+    s.build()
+    return s
+
+
+def test_gateway_admissions_are_port_billed_and_quarantine_applies(served):
+    """Every accepted request is billed through port.submit as a
+    gateway_admit IO — tenant accounting sees the front door — and a
+    quarantined tenant is rejected at submit with the typed error."""
+    cfg, params = served
+    shell = _shell()
+    try:
+        eng = ServingEngine(cfg, params, shell.services.get("mmu"),
+                            max_batch=2, max_len=128, shell=shell,
+                            slot=0, tenant="gold")
+        gw = ServingGateway(eng, admission="fifo")
+        for p in _prompts(cfg, (9, 13, 7), seed=31):
+            gw.submit(p, max_new_tokens=2)
+        gw.drain()
+        assert eng.flush_io()
+        assert not gw._admit_futs                     # admissions settled
+        ten = shell.scheduler.stats()["tenants"]["gold"]
+        # 3 gateway_admit IOs + per-step decode IOs all land on the tenant
+        assert ten["completions"] >= 3
+        shell.health.quarantine("gold")
+        with pytest.raises(PortError) as ei:
+            gw.submit(list(range(3, 8)), max_new_tokens=2)
+        assert ei.value.kind == FaultKind.QUARANTINED
+    finally:
+        shell.close()
+
+
+def test_scheduler_accounts_deadline_misses_per_tenant(served):
+    """The shell scheduler's QoS counters gained deadline_misses: an IO
+    completing past its absolute deadline is counted against its
+    tenant; on-time (or deadline-free) IOs are not."""
+    del served
+    shell = _shell()
+    try:
+        shell.register_tenant("gold", 1.0, slots=(0,))
+        port = shell.attach(0, tenant="gold")
+        port.submit(Invocation.io(64, tenant="gold",
+                                  deadline_s=1e-9)).result(timeout=10.0)
+        port.submit(Invocation.io(64, tenant="gold")).result(timeout=10.0)
+        ten = shell.scheduler.stats()["tenants"]["gold"]
+        assert ten["deadline_misses"] >= 1
+        assert ten["completions"] >= 2
+    finally:
+        shell.close()
