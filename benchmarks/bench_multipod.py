@@ -1,48 +1,125 @@
-"""Multi-pod collective schedule comparison (the BALBOA/RDMA analogue).
+"""Mesh-sharded serving: decode throughput vs TP degree + wire bytes.
 
-The collective service picks flat ring vs hierarchical (reduce-scatter
-intra-pod / all-reduce across pods / all-gather back) at run time.  The
-inter-pod links are the scarce resource (data-center fabric vs intra-pod
-ICI): the hierarchical schedule crosses the pod boundary with 1/|data| of
-the tensor.  Modeled wire bytes per device for a full-gradient all-reduce
-on the 2x16x16 production mesh (correctness of the hierarchical schedule
-is tested on real devices in tests/test_collectives_multidev.py)."""
+Each TP degree runs in a SUBPROCESS with 4 forced host CPU devices (the
+parent, like every bench, must keep seeing 1 device).  Per degree we
+measure steady-state fused-decode steps on a full batch and collect the
+GREEDY token streams; ``run()`` HARD-ASSERTS that every degree produced
+token-for-token identical streams — the bench doubles as the sharding
+acceptance gate, so a silent TP numerics regression fails CI, not just a
+parity test someone has to run.
+
+All-reduce traffic is modeled, not sniffed: ``TPContext`` reports the
+global psum payload per step (2 sites x n_layers x B x d_model x 4B) and
+:meth:`CollectiveService.wire_bytes` converts it to per-device wire bytes
+for the flat schedule the TP path uses (tiny latency-bound activations —
+see collectives.all_reduce).  CPU wall-clock does NOT improve with TP (4
+fake devices share the same cores and XLA:CPU collectives are memcpys);
+the quantity to watch is tokens/s holding roughly flat while wire bytes
+grow — compute is actually being partitioned.  The flat-vs-hierarchical
+schedule story for gradient-sized payloads lives in
+tests/test_collectives_multidev.py and docs/sharding.md.
+"""
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 from repro.core.services.collectives import CollectiveService
 
-GRAD_SIZES_GB = {           # bf16 gradient bytes (global)
-    "smollm-135m": 0.27,
-    "granite-moe-1b-a400m": 2.7,
-    "phi3-medium-14b": 28.0,
-    "qwen2-72b": 145.0,
-}
+TP_DEGREES = (1, 2, 4)
+BATCH = 4
+DECODE_STEPS = 24
+
+_WORKER = textwrap.dedent("""
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.services.mmu import MMU, MMUConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.serve.engine import ServingEngine
+
+    tp = int(sys.argv[1]); batch = int(sys.argv[2]); steps = int(sys.argv[3])
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    mesh = make_host_mesh(1, tp) if tp > 1 else None
+    eng = ServingEngine(cfg, params, MMU(MMUConfig(page_size=16,
+                                                   n_pages=256)),
+                        max_batch=batch, max_len=256, seed=0, mesh=mesh)
+    prompts = [list(range(3 + i, 11 + i)) for i in range(batch)]
+
+    # parity pass: short greedy generations, run to completion
+    for p in prompts:
+        eng.submit(p, max_new_tokens=12, temperature=0.0)
+    while eng.pending():
+        eng.step()
+    greedy = {r.rid: list(r.out_tokens) for r in eng.completed}
+
+    # throughput pass: same shapes (no recompile), long decode tail
+    for p in prompts:
+        eng.submit(p, max_new_tokens=steps + 8, temperature=0.0)
+    for _ in range(4):                       # admit + prefill + warmup
+        eng.step()
+    t0 = time.perf_counter()
+    emitted = sum(eng.step() for _ in range(steps))
+    dt = time.perf_counter() - t0
+    bytes_step = (eng.tp.allreduce_bytes_per_step(batch)
+                  if eng.tp is not None else 0)
+    print("RESULT " + json.dumps({
+        "tp": tp, "tokens_per_s": emitted / dt, "mean_s": dt / steps,
+        "greedy": {str(k): v for k, v in greedy.items()},
+        "shard_heads": bool(eng.tp and eng.tp.shard_heads),
+        "shard_mlp": bool(eng.tp and eng.tp.shard_mlp),
+        "allreduce_bytes_per_step": bytes_step}))
+""")
+
+
+def _measure(tp: int) -> dict:
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)               # the worker pins its own
+    r = subprocess.run(
+        [sys.executable, "-c", _WORKER, str(tp), str(BATCH),
+         str(DECODE_STEPS)],
+        capture_output=True, text=True, timeout=540, env=env)
+    for line in r.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"tp={tp} worker produced no RESULT\n"
+                       f"stdout:{r.stdout}\nstderr:{r.stderr[-3000:]}")
 
 
 def run():
+    results = [_measure(tp) for tp in TP_DEGREES]
+    # ---- the acceptance gate: greedy streams identical across degrees ----
+    base = results[0]["greedy"]
+    for res in results[1:]:
+        assert res["greedy"] == base, (
+            f"GREEDY PARITY BROKEN: tp={res['tp']} diverged from tp=1 "
+            f"({res['greedy']} vs {base})")
     rows = []
-    data, pods = 16, 2
-    for arch, gb in GRAD_SIZES_GB.items():
-        nbytes = gb * 1e9 / (data * pods * 16)   # per-device shard after RS
-        per_dev = gb * 1e9 / 256                 # rough per-device payload
-        flat = CollectiveService.wire_bytes("flat", per_dev, data, pods)
-        hier = CollectiveService.wire_bytes("hierarchical", per_dev, data,
-                                            pods)
-        # a flat ring over (pod, data) pushes its full wire volume across
-        # the pod boundary links on the seam; hierarchical crosses with
-        # only the scattered shard
-        flat_inter = flat["intra"] + flat["inter"]
+    for res in results:
+        wire = CollectiveService.wire_bytes(
+            "flat", res["allreduce_bytes_per_step"], data=res["tp"],
+            pods=1)
         rows.append({
-            "arch": arch,
-            "grad_gb": gb,
-            "flat_total_mb_per_dev": flat_inter / 1e6,
-            "hier_intra_mb_per_dev": hier["intra"] / 1e6,
-            "hier_inter_mb_per_dev": hier["inter"] / 1e6,
-            "interpod_reduction_x": flat_inter / max(hier["inter"], 1e-9),
+            "config": f"tp{res['tp']}_b{BATCH}",
+            "tokens_per_s": res["tokens_per_s"],
+            "mean_s": res["mean_s"],
+            "tp": res["tp"],
+            "shard_heads": res["shard_heads"],
+            "shard_mlp": res["shard_mlp"],
+            "allreduce_kb_per_step": res["allreduce_bytes_per_step"] / 1e3,
+            "wire_kb_per_dev_step": wire["intra"] / 1e3,
+            "greedy_parity": "ok",
         })
     return rows
 
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run(), "Multi-pod: flat vs hierarchical all-reduce wire bytes")
+    emit(run(), "Mesh-sharded serving: tokens/s vs TP degree (greedy "
+                "parity gated)")

@@ -53,7 +53,7 @@ SUITES = [
     ("serving_gateway", "bench_gateway",
      "Serving gateway: open-arrival goodput, TTFT SLOs, admission"),
     ("multipod_collectives", "bench_multipod",
-     "Multi-pod: flat vs hierarchical all-reduce schedules"),
+     "Mesh-sharded serving: tokens/s vs TP degree (greedy-parity gated)"),
     ("roofline", "bench_roofline",
      "Assignment roofline table (from dry-run cache)"),
 ]
@@ -68,6 +68,7 @@ JSON_ARTIFACTS = {
     "prefix_sharing": ("BENCH_prefix.json", "bench_prefix"),
     "fault_storm": ("BENCH_faults.json", "bench_faults"),
     "serving_gateway": ("BENCH_gateway.json", "bench_gateway"),
+    "multipod_collectives": ("BENCH_multipod.json", "bench_multipod"),
 }
 
 

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Fail CI on dead intra-repo markdown links and anchors.
+
+Checks README.md and docs/*.md:
+
+  * relative file links (``[x](docs/api.md)``, ``[y](../src/...)``) must
+    resolve to a file or directory in the repo;
+  * intra-repo anchor links (``docs/architecture.md#quiesce...`` or
+    ``#local-anchor``) must match a heading in the target file, using
+    GitHub's slug rule (lowercase, punctuation stripped, spaces to
+    dashes);
+  * external links (http/https/mailto) are NOT fetched — this is a
+    structure check, not a crawler.
+
+Exit 1 listing every dead link; exit 0 quiet when clean.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, lowercase,
+    spaces -> dashes (duplicate-heading -N suffixes not modeled; none of
+    our docs repeat headings)."""
+    h = re.sub(r"[`*_]", "", heading.strip())
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.lower().replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            dest = (path.parent / file_part).resolve()
+            if not dest.exists():
+                errors.append(f"{path.relative_to(ROOT)}: dead link "
+                              f"-> {target}")
+                continue
+        else:
+            dest = path
+        if anchor and dest.suffix == ".md":
+            if anchor.lower() not in anchors_of(dest):
+                errors.append(f"{path.relative_to(ROOT)}: dead anchor "
+                              f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    if errors:
+        print(f"[doc-links] {len(errors)} dead link(s):")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"[doc-links] OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,12 +43,16 @@ python examples/prefix_sharing.py
 # gateway_serving.py exits non-zero if any of those stop holding)
 python examples/gateway_serving.py
 
+# dead intra-repo links/anchors in README.md and docs/*.md fail CI —
+# the docs ARE the product surface for a guide-heavy PR sequence
+python scripts/check_doc_links.py
+
 # substring match: llm_serving runs both the sweep (-> BENCH_serving.json)
 # and llm_serving_scaling (Fig 10b concurrency curve); scheduler_qos,
 # kernel_microbench, multislot_lanes and live_migrate write their
 # BENCH_*.json artifacts
 python -m benchmarks.run \
-  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm,serving_gateway
+  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm,serving_gateway,multipod_collectives
 
 # Gated trend check: diff fresh artifacts against the previous PR's
 # committed versions (git show HEAD:..., falling back to
@@ -98,6 +102,13 @@ python scripts/diff_bench.py BENCH_faults.json    --warn-pct 200 "${STRICT[@]}"
 # but the ms-scale chunked-TTFT p99 cells swing ~70% under host load —
 # 150% floor = order-of-magnitude guard over the noisiest row
 python scripts/diff_bench.py BENCH_gateway.json   --warn-pct 150 "${STRICT[@]}"
+# multipod: greedy token parity across TP degrees is HARD-ASSERTED
+# inside bench_multipod.run(); the trend rows are tokens/s measured in
+# per-degree SUBPROCESSES (compile + 4 fake devices on shared cores),
+# the noisiest timing in the suite — measured run-to-run swing up to
+# ~2x, so 200% floor = order-of-magnitude guard (e.g. a decode-path
+# reshard-per-step bug costs far more than 3x)
+python scripts/diff_bench.py BENCH_multipod.json  --warn-pct 200 "${STRICT[@]}"
 
 # record this run in the history store (keyed by commit+suite+config;
 # re-runs on the same commit replace, never duplicate), keeping the
@@ -105,4 +116,4 @@ python scripts/diff_bench.py BENCH_gateway.json   --warn-pct 150 "${STRICT[@]}"
 python scripts/bench_history.py append BENCH_serving.json \
   BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json \
   BENCH_migrate.json BENCH_prefix.json BENCH_faults.json \
-  BENCH_gateway.json --prune 50
+  BENCH_gateway.json BENCH_multipod.json --prune 50

@@ -55,8 +55,21 @@ class CollectiveService(Service):
                 else "flat")
 
     # -- shard_map primitives ---------------------------------------------------
-    def all_reduce(self, x, mesh) -> jnp.ndarray:
-        """Schedule-aware all-reduce for use INSIDE shard_map bodies."""
+    def all_reduce(self, x, mesh, axes: Optional[Tuple[str, ...]] = None
+                   ) -> jnp.ndarray:
+        """Schedule-aware all-reduce for use INSIDE shard_map bodies.
+
+        Default (``axes=None``): reduce over the data-parallel axes with
+        the configured schedule (flat psum vs hierarchical RS/AR/AG) —
+        the gradient path.  ``axes=(...,)`` overrides the axis set and
+        always reduces flat: the tensor-parallel serving path sums
+        attention/MLP partials over the ``model`` axis this way
+        (``repro.serve.tp``), where the reduction is tiny (one activation
+        vector) and latency-bound, so schedule games don't pay.
+        """
+        if axes is not None:
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+            return jax.lax.psum(x, axes) if axes else x
         sched = self.pick_schedule(mesh)
         c: CollectiveConfig = self.config
         if sched == "hierarchical" and c.pod_axis in mesh.axis_names:

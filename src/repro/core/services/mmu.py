@@ -38,8 +38,10 @@ import numpy as np
 from repro.core.services.base import Service
 
 try:                                  # device view is optional: the MMU
-    import jax.numpy as jnp          # driver half works without a device
+    import jax                       # driver half works without a device
+    import jax.numpy as jnp
 except ImportError:                  # pragma: no cover
+    jax = None
     jnp = None
 
 
@@ -667,16 +669,19 @@ class MMU(Service):
         with self._lock:
             return self._map_version.get(seq_id, -1)
 
-    def block_table_device(self, n_slots: int,
-                           max_pages: int) -> "DeviceBlockTable":
+    def block_table_device(self, n_slots: int, max_pages: int, *,
+                           sharding=None) -> "DeviceBlockTable":
         """A cached device-resident block-table view over a fixed window
         of engine slots — the steady-state decode step reads a device
         array that is already there; only rows whose mapping changed
-        (alloc/extend/free/evict deltas) are re-uploaded."""
+        (alloc/extend/free/evict deltas) are re-uploaded.  ``sharding``
+        (a replicated ``NamedSharding``) pins the mirror to a mesh for
+        tensor-parallel engines: one logical table, every shard reads
+        the same copy."""
         if jnp is None:
             raise ImportError("jax is required for MMU device block-table "
                               "views (the host-side driver works without)")
-        return DeviceBlockTable(self, n_slots, max_pages)
+        return DeviceBlockTable(self, n_slots, max_pages, sharding=sharding)
 
     def channel_of(self, ppage: int) -> int:
         """Striping: which channel (HBM bank) a page lives on."""
@@ -828,10 +833,12 @@ class DeviceBlockTable:
     call is a pure cache hit: zero host->device traffic.
     """
 
-    def __init__(self, mmu: "MMU", n_slots: int, max_pages: int):
+    def __init__(self, mmu: "MMU", n_slots: int, max_pages: int, *,
+                 sharding=None):
         self.mmu = mmu
         self.n_slots = n_slots
         self.max_pages = max_pages
+        self.sharding = sharding          # replicated NamedSharding or None
         self._seq = [-1] * n_slots                    # slot -> seq id
         self._ver = [-2] * n_slots                    # last-seen map version
         self._host = np.full((n_slots, max_pages), -1, np.int32)
@@ -864,7 +871,9 @@ class DeviceBlockTable:
                 self._ver[i] = v
                 self._stale.add(i)
         if self._dev is None:
-            self._dev = jnp.asarray(self._host)
+            self._dev = (jax.device_put(self._host, self.sharding)
+                         if self.sharding is not None
+                         else jnp.asarray(self._host))
             self.row_uploads += self.n_slots
             self.last_updated_rows = list(range(self.n_slots))
             self._stale.clear()
@@ -872,6 +881,11 @@ class DeviceBlockTable:
             rows = sorted(self._stale)
             self._dev = self._dev.at[jnp.asarray(rows, jnp.int32)].set(
                 jnp.asarray(self._host[rows]))
+            if self.sharding is not None:
+                # keep the mirror pinned replicated across the mesh (the
+                # scatter above follows the committed input, but be
+                # explicit: the TP decode jit keys on this sharding)
+                self._dev = jax.device_put(self._dev, self.sharding)
             self.row_uploads += len(rows)
             self.last_updated_rows = rows
             self._stale.clear()

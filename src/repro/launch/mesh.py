@@ -26,10 +26,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Small mesh over whatever local devices exist (tests, examples)."""
+    """Small mesh over whatever local devices exist (tests, examples).
+
+    Raises a descriptive :class:`RuntimeError` (NOT a bare assert) when
+    the process does not expose enough devices, so multi-device tests can
+    ``pytest.skip`` on the message instead of erroring.  On CPU, force
+    extra host devices with::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=N
+
+    set in the environment BEFORE jax is imported.
+    """
     n = data * model
     devs = jax.devices()[:n]
-    assert len(devs) == n, f"need {n} devices, have {len(jax.devices())}"
+    if len(devs) != n:
+        raise RuntimeError(
+            f"make_host_mesh(data={data}, model={model}) needs {n} "
+            f"devices but this process sees {len(jax.devices())}; on CPU "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax (subprocess-style, see "
+            "tests/test_mesh_serving.py and docs/sharding.md)")
     return compat.make_mesh((data, model), ("data", "model"),
                             axis_types=compat.auto_axis_types(2),
                             devices=devs)

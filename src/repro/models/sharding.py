@@ -63,6 +63,10 @@ class MeshRules:
         gather per layer (bf16) and gradients reduce-scatter.  Wins when
         global_batch x seq is large relative to the model (the qwen2
         train hillclimb: 2.6 TB -> ~0.4 TB wire/step)."""
+        if scheme not in ("2d", "zero3"):
+            raise ValueError(
+                f"unknown MeshRules scheme {scheme!r}: expected '2d' "
+                "(FSDP rows x TP columns) or 'zero3' (pure FSDP)")
         names = mesh.axis_names
         if scheme == "zero3":
             fsdp_axes = tuple(names)

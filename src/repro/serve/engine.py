@@ -49,6 +49,7 @@ the tier-1 smoke path plus the quick bench.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -107,7 +108,7 @@ class ServingEngine:
                  pages_per_block: Optional[int] = None, seed: int = 0,
                  shell=None, slot: int = 0, tenant: Optional[str] = None,
                  rid_base: int = 0, prefill_chunk: Optional[int] = None,
-                 admit_window: int = 8):
+                 admit_window: int = 8, mesh=None, collectives=None):
         assert cfg.ssm is None and len(cfg.block_pattern) == 1, \
             "paged engine serves attention archs (DESIGN.md §5)"
         self.cfg = cfg
@@ -143,7 +144,37 @@ class ServingEngine:
         # fires for every emitted token (prefill first-tokens included)
         self.admission_hook = None
         self.token_sink = None
-        self.pools = make_pools(cfg, mmu.config.n_pages, self.page)
+        # Tensor-parallel serving (docs/sharding.md): a mesh with a
+        # model axis > 1 shards weights and KV pools across its devices
+        # while everything host-side — MMU, block table, pager, queue,
+        # scheduler — stays logically single.  ``collectives`` routes
+        # the per-layer partial-sum reductions through the shell's
+        # CollectiveService port.
+        self.mesh = mesh
+        self.tp = None
+        if mesh is not None and dict(mesh.shape).get("model", 1) > 1:
+            from repro.serve.tp import TPContext
+            self.tp = TPContext(cfg, mesh, params, page_size=self.page,
+                                use_pallas=use_pallas,
+                                pages_per_block=pages_per_block,
+                                collectives=collectives)
+            self.params = self.tp.params
+        if self.tp is not None:
+            self._decode_step = self.tp.decode_step
+            self._prefill_shared = self.tp.prefill_shared
+            self._prefill_chunk = self.tp.prefill_chunk
+        else:
+            self._decode_step = functools.partial(
+                decode_step_paged, cfg=cfg, page_size=self.page,
+                use_pallas=use_pallas, pages_per_block=pages_per_block)
+            self._prefill_shared = functools.partial(
+                prefill_shared_paged, cfg=cfg, page_size=self.page)
+            self._prefill_chunk = functools.partial(
+                prefill_chunk_paged, cfg=cfg, page_size=self.page)
+        self.pools = make_pools(
+            cfg, mmu.config.n_pages, self.page,
+            kv_sharding=self.tp.kv_sharding if self.tp is not None
+            else None)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque[Request] = deque()
         self._rng = np.random.RandomState(seed)     # host sampling oracle
@@ -162,18 +193,20 @@ class ServingEngine:
         self.prefill_skipped = 0
         # Device-resident decode state: block tables (cached MMU view),
         # row lengths, last tokens, temperatures, PRNG key.
-        self.block_table = mmu.block_table_device(max_batch, self.max_pages)
-        self.dev_lens = jnp.zeros((max_batch,), jnp.int32)
-        self.dev_tokens = jnp.zeros((max_batch,), jnp.int32)
-        self.dev_temps = jnp.zeros((max_batch,), jnp.float32)
-        self.dev_topk = jnp.zeros((max_batch,), jnp.int32)
-        self.dev_topp = jnp.ones((max_batch,), jnp.float32)
+        self.block_table = mmu.block_table_device(
+            max_batch, self.max_pages,
+            sharding=self.tp.replicated if self.tp is not None else None)
+        self.dev_lens = self._place(jnp.zeros((max_batch,), jnp.int32))
+        self.dev_tokens = self._place(jnp.zeros((max_batch,), jnp.int32))
+        self.dev_temps = self._place(jnp.zeros((max_batch,), jnp.float32))
+        self.dev_topk = self._place(jnp.zeros((max_batch,), jnp.int32))
+        self.dev_topp = self._place(jnp.ones((max_batch,), jnp.float32))
         # per-slot sequence ids: sampling keys are counter-based
         # fold_in(fold_in(rng, rid), token_index), so a request's
         # sampled stream is invariant to admission order, chunking, and
         # continuous-vs-wave scheduling (see sampler.fold_row_keys)
-        self.dev_rids = jnp.zeros((max_batch,), jnp.int32)
-        self.rng = jax.random.PRNGKey(seed)
+        self.dev_rids = self._place(jnp.zeros((max_batch,), jnp.int32))
+        self.rng = self._place(jax.random.PRNGKey(seed))
         # Optional shell binding: decode-step I/O is then submitted through
         # the slot's unified Port (Port API v2) into the shell scheduler
         # (weighted credits + arbiter) instead of bypassing the shared
@@ -197,6 +230,23 @@ class ServingEngine:
         mmu.register_pager(self._pager_gather, self._pager_scatter,
                            owner=self)
 
+    # --------------------------------------------------- TP placement ------
+    def _place(self, arr):
+        """Device-resident decode state: replicated across the TP mesh
+        when sharded, plain single-device array otherwise."""
+        if self.tp is not None:
+            return jax.device_put(arr, self.tp.replicated)
+        return jnp.asarray(arr)
+
+    def _adopt_pools(self, pools):
+        """Re-pin KV pools to the TP head-sharded layout after a scatter
+        (GSPMD propagation normally preserves it; this makes the decode
+        jit's input layout an invariant, not an inference)."""
+        if self.tp is not None:
+            pools = {s: jax.device_put(p, self.tp.kv_sharding)
+                     for s, p in pools.items()}
+        return pools
+
     # ------------------------------------------------- evict-with-copy -----
     def _pager_gather(self, ppage: int) -> Dict[str, np.ndarray]:
         """Copy one physical page's KV (all layers) to host — called by
@@ -212,9 +262,9 @@ class ServingEngine:
         page (MMU fault-back-in path)."""
         flat = flat_page_indices([ppage], self.cfg.n_layers,
                                  self.mmu.config.n_pages)
-        self.pools = scatter_kv_pages(
+        self.pools = self._adopt_pools(scatter_kv_pages(
             self.pools, flat, {"k": jnp.asarray(data["k"]),
-                               "v": jnp.asarray(data["v"])})
+                               "v": jnp.asarray(data["v"])}))
 
     # -------------------------------------------------------------- API ----
     def submit(self, prompt: List[int], max_new_tokens: int = 16, *,
@@ -369,10 +419,10 @@ class ServingEngine:
                 q_lens[j] = chunk
                 tokens[j] = req.prompt[req.prefill_pos:
                                        req.prefill_pos + chunk]
-            self.pools = prefill_chunk_paged(
+            self.pools = self._prefill_chunk(
                 self.params, self.pools, jnp.asarray(tokens),
                 jnp.asarray(q_lens), jnp.asarray(q_starts),
-                jnp.asarray(tables), cfg=self.cfg, page_size=self.page)
+                jnp.asarray(tables))
             jax.block_until_ready(self.pools["k"])
             n_tok = n * chunk
             self.prefill_computed += n_tok
@@ -445,12 +495,12 @@ class ServingEngine:
         seq_ids = np.zeros((nb,), np.int32)
         for j, (_, req, _, _) in enumerate(rows):
             seq_ids[j] = req.rid
-        first, self.pools, self.rng = prefill_shared_paged(
+        first, self.pools, self.rng = self._prefill_shared(
             self.params, self.pools, jnp.asarray(tokens),
             jnp.asarray(q_lens), jnp.asarray(q_starts),
             jnp.asarray(write_from), jnp.asarray(tables), self.rng,
             jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(topps),
-            jnp.asarray(seq_ids), cfg=self.cfg, page_size=self.page)
+            jnp.asarray(seq_ids))
         first = np.asarray(first)
         now = time.perf_counter()
         self.ewma_prefill_s_per_tok = self._ewma(
@@ -565,12 +615,10 @@ class ServingEngine:
                   self.slots[i].top_k,
                   self.slots[i].top_p,
                   self.slots[i].rid) for i in upd])
-        next_toks, self.pools, self.dev_lens, self.rng = decode_step_paged(
+        next_toks, self.pools, self.dev_lens, self.rng = self._decode_step(
             self.params, self.pools, tables, self.dev_lens,
             self.dev_tokens, self.rng, self.dev_temps, self.dev_topk,
-            self.dev_topp, self.dev_rids, cfg=self.cfg,
-            page_size=self.page, use_pallas=self.use_pallas,
-            pages_per_block=self.pages_per_block)
+            self.dev_topp, self.dev_rids)
         self.dev_tokens = next_toks
         # the ONLY per-step device->host sync: the (B,) int32 token vector
         toks = np.asarray(next_toks)
@@ -808,9 +856,9 @@ class ServingEngine:
         if header["pages"]:
             new_pps = [by_old[p["ppage"]] for p in header["pages"]]
             flat = flat_page_indices(new_pps, self.cfg.n_layers, n_pages)
-            self.pools = scatter_kv_pages(
+            self.pools = self._adopt_pools(scatter_kv_pages(
                 self.pools, flat, {"k": jnp.asarray(arrays["kv_k"]),
-                                   "v": jnp.asarray(arrays["kv_v"])})
+                                   "v": jnp.asarray(arrays["kv_v"])}))
         for key, data in (arrays.get("host_pages") or {}).items():
             if key.startswith("h:"):
                 new_pp = by_hslot[int(key[2:])]
@@ -818,9 +866,9 @@ class ServingEngine:
                 _, sid, vpage = key.split(":")
                 new_pp = by_sv[(int(sid), int(vpage))]
             flat = flat_page_indices([new_pp], self.cfg.n_layers, n_pages)
-            self.pools = scatter_kv_pages(
+            self.pools = self._adopt_pools(scatter_kv_pages(
                 self.pools, flat, {"k": jnp.asarray(data["k"]),
-                                   "v": jnp.asarray(data["v"])})
+                                   "v": jnp.asarray(data["v"])}))
         slots_i, rows = [], []
         for rd in reqs:
             req = self._req_from_dict(rd)
@@ -839,7 +887,7 @@ class ServingEngine:
             self._sync_slot_state(slots_i, rows)
         for rd in header["queue"]:
             self.queue.append(self._req_from_dict(rd))
-        self.rng = jnp.asarray(arrays["rng"])
+        self.rng = self._place(jnp.asarray(arrays["rng"]))
         adopted = ([r["rid"] for r in reqs]
                    + [r["rid"] for r in header["queue"]])
         if adopted:
@@ -856,14 +904,17 @@ class ServingEngine:
         touched: :meth:`restore_state` scatters the preserved page
         payloads back in right after, which is what makes a recovery
         KV-intact instead of a re-prefill."""
-        self.block_table = self.mmu.block_table_device(self.max_batch,
-                                                       self.max_pages)
-        self.dev_lens = jnp.zeros((self.max_batch,), jnp.int32)
-        self.dev_tokens = jnp.zeros((self.max_batch,), jnp.int32)
-        self.dev_temps = jnp.zeros((self.max_batch,), jnp.float32)
-        self.dev_topk = jnp.zeros((self.max_batch,), jnp.int32)
-        self.dev_topp = jnp.ones((self.max_batch,), jnp.float32)
-        self.dev_rids = jnp.zeros((self.max_batch,), jnp.int32)
+        self.block_table = self.mmu.block_table_device(
+            self.max_batch, self.max_pages,
+            sharding=self.tp.replicated if self.tp is not None else None)
+        self.dev_lens = self._place(jnp.zeros((self.max_batch,), jnp.int32))
+        self.dev_tokens = self._place(
+            jnp.zeros((self.max_batch,), jnp.int32))
+        self.dev_temps = self._place(
+            jnp.zeros((self.max_batch,), jnp.float32))
+        self.dev_topk = self._place(jnp.zeros((self.max_batch,), jnp.int32))
+        self.dev_topp = self._place(jnp.ones((self.max_batch,), jnp.float32))
+        self.dev_rids = self._place(jnp.zeros((self.max_batch,), jnp.int32))
         self._io_futs = []
         self.mmu.tlb.invalidate()
 

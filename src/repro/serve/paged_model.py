@@ -58,12 +58,24 @@ def _count_trace(name: str) -> None:
 
 
 def make_pools(cfg: ModelConfig, n_pages: int, page_size: int, *,
-               dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+               dtype=jnp.float32, kv_sharding=None) -> Dict[str, jnp.ndarray]:
     """Flat KV pools: layer ``l``'s page ``p`` is flat slot
-    ``l * n_pages + p`` of a (n_layers * n_pages, page, K, hd) buffer."""
+    ``l * n_pages + p`` of a (n_layers * n_pages, page, K, hd) buffer.
+
+    ``kv_sharding``: optional ``NamedSharding`` for tensor-parallel
+    serving — the canonical TP layout shards axis 2 (``kv_heads``) on the
+    mesh's ``model`` axis (``P(None, None, "model", None)``), so each
+    device holds every page but only its head slice and paged attention
+    needs no collective (softmax is head-local).  The page-id geometry is
+    unchanged: block tables, the pager, and migration stay shard-agnostic.
+    """
     hd = cfg.resolved_head_dim
     shape = (cfg.n_layers * n_pages, page_size, cfg.n_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    pools = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_sharding is not None:
+        pools = {s: jax.device_put(p, kv_sharding)
+                 for s, p in pools.items()}
+    return pools
 
 
 def write_prefill(pools, layer_kv, tables, lens, page_size: int):
@@ -170,12 +182,11 @@ def prefill_paged(params, pools, tokens, lens, tables, rng, temperatures,
     return first, pools, rng
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
-                   donate_argnames=("pools", "rng"))
-def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
+def _prefill_shared_impl(params, pools, tokens, q_lens, q_starts,
                          write_from, tables, rng, temperatures,
                          top_k=None, top_p=None, seq_ids=None,
-                         *, cfg: ModelConfig, page_size: int):
+                         *, cfg: ModelConfig, page_size: int,
+                         psum_attn=None, psum_mlp=None):
     """Suffix prefill for prefix-shared admissions.
 
     When the MMU maps a prompt's leading pages onto already-resident
@@ -208,8 +219,13 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
     row instead of one batch-wide split — so a request's first token is
     identical however admission batched or chunked its prefill, and
     ``rng`` passes through unconsumed.
+
+    ``psum_attn`` / ``psum_mlp``: optional reduction hooks for the
+    tensor-parallel path (``repro.serve.tp``) — called on the out-proj /
+    FFN partial sums when this body runs inside shard_map with
+    head-/hidden-sharded weights.  None (the default) is the
+    single-device path, byte-for-byte the pre-TP behaviour.
     """
-    _count_trace("prefill_shared_paged")
     n, t = tokens.shape
     maxp = tables.shape[1]
     n_flat = pools["k"].shape[0]
@@ -263,12 +279,17 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
         any_ok = jnp.any(mask, axis=-1)                     # (N,T)
         att = jnp.where(any_ok[:, :, None, None, None], att, 0.0)
         att = att.reshape(n, t, cfg.n_heads, -1).astype(x.dtype)
-        x = x + attention.out_proj(lp["attn"], cfg, att)
+        o = attention.out_proj(lp["attn"], cfg, att)
+        if psum_attn is not None:
+            o = psum_attn(o)
+        x = x + o
         h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
         if _is_moe_layer(cfg):
             out, _ = moe.moe_apply(lp["ffn"], cfg, h)
         else:
             out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        if psum_mlp is not None:
+            out = psum_mlp(out)
         return (x + out, kp, vp), None
 
     (x, kpool, vpool), _ = jax.lax.scan(
@@ -287,9 +308,23 @@ def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
-                   donate_argnames=("pools",))
-def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
-                        *, cfg: ModelConfig, page_size: int):
+                   donate_argnames=("pools", "rng"))
+def prefill_shared_paged(params, pools, tokens, q_lens, q_starts,
+                         write_from, tables, rng, temperatures,
+                         top_k=None, top_p=None, seq_ids=None,
+                         *, cfg: ModelConfig, page_size: int):
+    """Jitted single-device entry point over :func:`_prefill_shared_impl`
+    (see its docstring for the full contract).  The tensor-parallel twin
+    lives in ``repro.serve.tp`` and wraps the same impl in shard_map."""
+    _count_trace("prefill_shared_paged")
+    return _prefill_shared_impl(
+        params, pools, tokens, q_lens, q_starts, write_from, tables, rng,
+        temperatures, top_k, top_p, seq_ids, cfg=cfg, page_size=page_size)
+
+
+def _prefill_chunk_impl(params, pools, tokens, q_lens, q_starts, tables,
+                        *, cfg: ModelConfig, page_size: int,
+                        psum_attn=None, psum_mlp=None):
     """One INTERMEDIATE chunk of a streaming prefill: KV only, no logits.
 
     The chunked-prefill twin of :func:`prefill_shared_paged`: row i runs
@@ -310,8 +345,9 @@ def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
     Returns ``new_pools`` only; ``pools`` is donated.  Retraces per
     (N, T, maxp) bucket like the other prefill entry points — chunk
     sizes are engine-fixed, so the bucket set stays O(log) small.
+    ``psum_attn``/``psum_mlp`` are the TP reduction hooks (see
+    :func:`_prefill_shared_impl`).
     """
-    _count_trace("prefill_chunk_paged")
     n, t = tokens.shape
     maxp = tables.shape[1]
     n_flat = pools["k"].shape[0]
@@ -360,12 +396,17 @@ def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
         any_ok = jnp.any(mask, axis=-1)                     # (N,T)
         att = jnp.where(any_ok[:, :, None, None, None], att, 0.0)
         att = att.reshape(n, t, cfg.n_heads, -1).astype(x.dtype)
-        x = x + attention.out_proj(lp["attn"], cfg, att)
+        o = attention.out_proj(lp["attn"], cfg, att)
+        if psum_attn is not None:
+            o = psum_attn(o)
+        x = x + o
         h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
         if _is_moe_layer(cfg):
             out, _ = moe.moe_apply(lp["ffn"], cfg, h)
         else:
             out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        if psum_mlp is not None:
+            out = psum_mlp(out)
         return (x + out, kp, vp), None
 
     (_, kpool, vpool), _ = jax.lax.scan(
@@ -374,15 +415,22 @@ def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
     return {"k": kpool, "v": vpool}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "page_size",
-                                             "use_pallas",
-                                             "pages_per_block"),
-                   donate_argnames=("pools", "lens", "last_tokens", "rng"))
-def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size"),
+                   donate_argnames=("pools",))
+def prefill_chunk_paged(params, pools, tokens, q_lens, q_starts, tables,
+                        *, cfg: ModelConfig, page_size: int):
+    """Jitted single-device entry point over :func:`_prefill_chunk_impl`."""
+    _count_trace("prefill_chunk_paged")
+    return _prefill_chunk_impl(params, pools, tokens, q_lens, q_starts,
+                               tables, cfg=cfg, page_size=page_size)
+
+
+def _decode_step_impl(params, pools, tables, lens, last_tokens, rng,
                       temperatures, top_k=None, top_p=None, seq_ids=None,
                       *, cfg: ModelConfig, page_size: int,
                       use_pallas: bool = False,
-                      pages_per_block: Optional[int] = None):
+                      pages_per_block: Optional[int] = None,
+                      psum_attn=None, psum_mlp=None):
     """One fused decode step for the whole running batch.
 
     last_tokens (B,) int32 — last sampled token per row;
@@ -398,8 +446,13 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
     place.  ``tables`` is NOT donated — it is the MMU's cached device
     view, reused across steps.  The only host<->device traffic a caller
     needs per step is reading back the (B,) token vector.
+
+    ``psum_attn``/``psum_mlp`` are the TP reduction hooks (see
+    :func:`_prefill_shared_impl`): under ``repro.serve.tp`` this body
+    runs inside shard_map with a per-device head/hidden slice of the
+    weights and KV pools, and the hooks all-reduce the out-proj and FFN
+    partial sums over the ``model`` axis.
     """
-    _count_trace("decode_step_paged")
     maxp = tables.shape[1]
     n_flat = pools["k"].shape[0]
     n_pages = n_flat // cfg.n_layers
@@ -430,12 +483,17 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
         att = paged_decode(q[:, 0], kp, vp, ltab, kv_lens,
                            use_pallas=use_pallas,
                            pages_per_block=pages_per_block)
-        x = x + attention.out_proj(lp["attn"], cfg, att[:, None])
+        o = attention.out_proj(lp["attn"], cfg, att[:, None])
+        if psum_attn is not None:
+            o = psum_attn(o)
+        x = x + o
         h = layers.norm_apply(lp["norm2"], x, cfg.norm_eps)
         if _is_moe_layer(cfg):
             out, _ = moe.moe_apply(lp["ffn"], cfg, h)
         else:
             out = mlp.mlp_apply(lp["ffn"], cfg, h)
+        if psum_mlp is not None:
+            out = psum_mlp(out)
         return (x + out, kp, vp), None
 
     (x, kpool, vpool), _ = jax.lax.scan(
@@ -459,3 +517,22 @@ def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
     # reset the counters host-side).
     new_lens = lens + 1
     return next_tokens, {"k": kpool, "v": vpool}, new_lens, rng
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "page_size",
+                                             "use_pallas",
+                                             "pages_per_block"),
+                   donate_argnames=("pools", "lens", "last_tokens", "rng"))
+def decode_step_paged(params, pools, tables, lens, last_tokens, rng,
+                      temperatures, top_k=None, top_p=None, seq_ids=None,
+                      *, cfg: ModelConfig, page_size: int,
+                      use_pallas: bool = False,
+                      pages_per_block: Optional[int] = None):
+    """Jitted single-device entry point over :func:`_decode_step_impl`
+    (see its docstring for the full contract).  The tensor-parallel twin
+    lives in ``repro.serve.tp``."""
+    _count_trace("decode_step_paged")
+    return _decode_step_impl(
+        params, pools, tables, lens, last_tokens, rng, temperatures,
+        top_k, top_p, seq_ids, cfg=cfg, page_size=page_size,
+        use_pallas=use_pallas, pages_per_block=pages_per_block)
