@@ -54,6 +54,8 @@ SUITES = [
      "Serving gateway: open-arrival goodput, TTFT SLOs, admission"),
     ("multipod_collectives", "bench_multipod",
      "Mesh-sharded serving: tokens/s vs TP degree (greedy-parity gated)"),
+    ("fleet_controller", "bench_fleet",
+     "Fleet controller: pre-copy downtime gate + auto-migration parity"),
     ("roofline", "bench_roofline",
      "Assignment roofline table (from dry-run cache)"),
 ]
@@ -69,6 +71,7 @@ JSON_ARTIFACTS = {
     "fault_storm": ("BENCH_faults.json", "bench_faults"),
     "serving_gateway": ("BENCH_gateway.json", "bench_gateway"),
     "multipod_collectives": ("BENCH_multipod.json", "bench_multipod"),
+    "fleet_controller": ("BENCH_fleet.json", "bench_fleet"),
 }
 
 

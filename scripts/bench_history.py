@@ -47,7 +47,10 @@ EXTRA_METRICS = (("ratio_err_pct", -1), ("jain_weighted", +1),
                  ("capacity_x", +1), ("recovery_p99_ms", -1),
                  ("bystander_p99_ms", -1), ("goodput_x", +1),
                  ("ttft_speedup_x", +1), ("goodput", +1),
-                 ("ttft_p99_ms", -1))
+                 ("ttft_p99_ms", -1),
+                 # fleet controller rows: the auto-migration row has no
+                 # mean_s, so its freeze-window p99 is the primary trend
+                 ("downtime_p99_ms", -1), ("precopy_rounds", -1))
 
 
 def metric_of(row: Dict) -> Optional[tuple]:

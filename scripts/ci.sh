@@ -43,6 +43,17 @@ python examples/prefix_sharing.py
 # gateway_serving.py exits non-zero if any of those stop holding)
 python examples/gateway_serving.py
 
+# smoke the fleet-controller demo (score-based placement, a controller-
+# triggered pre-copy auto-migration off a hot member with gateway
+# stream re-homing — examples/fleet_autoscale.py exits non-zero on any
+# lost/duplicated stream or token divergence vs its oracle)
+python examples/fleet_autoscale.py
+
+# line-coverage gate over the migration/fleet control plane (stdlib
+# trace; pytest-cov is not installable here) — the fuzz/property layer
+# must keep reaching the surface it guards.  Floor = measured - 10pts.
+python scripts/coverage_gate.py
+
 # dead intra-repo links/anchors in README.md and docs/*.md fail CI —
 # the docs ARE the product surface for a guide-heavy PR sequence
 python scripts/check_doc_links.py
@@ -52,7 +63,7 @@ python scripts/check_doc_links.py
 # kernel_microbench, multislot_lanes and live_migrate write their
 # BENCH_*.json artifacts
 python -m benchmarks.run \
-  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm,serving_gateway,multipod_collectives
+  --only llm_serving,scheduler_qos,kernel_microbench,multislot_lanes,live_migrate,prefix_sharing,fault_storm,serving_gateway,multipod_collectives,fleet_controller
 
 # Gated trend check: diff fresh artifacts against the previous PR's
 # committed versions (git show HEAD:..., falling back to
@@ -109,6 +120,12 @@ python scripts/diff_bench.py BENCH_gateway.json   --warn-pct 150 "${STRICT[@]}"
 # ~2x, so 200% floor = order-of-magnitude guard (e.g. a decode-path
 # reshard-per-step bug costs far more than 3x)
 python scripts/diff_bench.py BENCH_multipod.json  --warn-pct 200 "${STRICT[@]}"
+# fleet: the load-bearing claims (pre-copy p99 <= 0.25x stop-and-copy,
+# controller-triggered auto-migration with oracle token parity + zero
+# lost/dup streams) are HARD-ASSERTED inside bench_fleet.run(); the
+# trend rows are ms-scale freeze windows, as host-load sensitive as the
+# migrate suite — 200% floor = order-of-magnitude guard only
+python scripts/diff_bench.py BENCH_fleet.json     --warn-pct 200 "${STRICT[@]}"
 
 # record this run in the history store (keyed by commit+suite+config;
 # re-runs on the same commit replace, never duplicate), keeping the
@@ -116,4 +133,4 @@ python scripts/diff_bench.py BENCH_multipod.json  --warn-pct 200 "${STRICT[@]}"
 python scripts/bench_history.py append BENCH_serving.json \
   BENCH_scheduler.json BENCH_kernels.json BENCH_multislot.json \
   BENCH_migrate.json BENCH_prefix.json BENCH_faults.json \
-  BENCH_gateway.json BENCH_multipod.json --prune 50
+  BENCH_gateway.json BENCH_multipod.json BENCH_fleet.json --prune 50

@@ -1,0 +1,91 @@
+#!/usr/bin/env python
+"""Line-coverage gate for the migration/fleet control plane.
+
+``pytest-cov``/``coverage`` are not installable in this environment, so
+the gate drives stdlib ``trace.Trace(count=1)`` over the fleet and
+pre-copy test files in-process and computes executed-line fractions per
+control-plane module (executable line sets come from
+``trace._find_executable_linenos`` — the same oracle ``trace`` itself
+uses for its coverage listings).  Exits non-zero when the AGGREGATE
+coverage over the targets drops below ``--min``, so a PR cannot grow
+the migration surface without the property/fuzz layer reaching it.
+
+    PYTHONPATH=src python scripts/coverage_gate.py [--min PCT]
+
+Only control-plane (pure-Python) modules are gated: jitted kernel
+bodies execute outside the interpreter after compilation, so their
+line counts would be trace-time artifacts, not coverage.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import trace
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# the migration/recovery surface the fleet test layer is responsible
+# for.  No __init__.py: stdlib trace's ignore cache keys by BARE module
+# name, so once any stdlib "__init__" under sys.prefix is ignored,
+# every package __init__ is — their counts are unmeasurable here.
+TARGETS = [
+    "src/repro/fleet/controller.py",
+    "src/repro/core/migrate.py",
+    "src/repro/core/services/mmu.py",
+    "src/repro/core/bitstream.py",
+]
+TESTS = ["tests/test_fleet_fuzz.py", "tests/test_precopy.py"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    # measured on the seed run: 75.8% aggregate (controller 78%, mmu
+    # 81%, migrate 69%, bitstream 71%); the floor sits 10pts under that
+    ap.add_argument("--min", type=float, default=65.0,
+                    help="aggregate coverage floor over TARGETS (pct)")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.chdir(REPO)
+    src = os.path.join(REPO, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    import pytest
+
+    tracer = trace.Trace(count=1, trace=0,
+                         ignoredirs=[sys.prefix, sys.exec_prefix])
+    status = []
+    tracer.runfunc(lambda: status.append(pytest.main(["-x", "-q"] + TESTS)))
+    if status[0] != 0:
+        print(f"[coverage-gate] gated tests FAILED (pytest exit "
+              f"{status[0]})")
+        return 1
+
+    hit = {}
+    for (fname, lineno), n in tracer.results().counts.items():
+        if n > 0:
+            hit.setdefault(os.path.abspath(fname), set()).add(lineno)
+
+    print(f"\n{'module':<40} {'lines':>6} {'hit':>6} {'cov%':>7}")
+    tot_lines = tot_hit = 0
+    for rel in TARGETS:
+        path = os.path.abspath(os.path.join(REPO, rel))
+        execable = set(trace._find_executable_linenos(path))
+        got = len(execable & hit.get(path, set()))
+        tot_lines += len(execable)
+        tot_hit += got
+        pct = 100.0 * got / max(len(execable), 1)
+        print(f"{rel:<40} {len(execable):>6} {got:>6} {pct:>6.1f}%")
+
+    pct = 100.0 * tot_hit / max(tot_lines, 1)
+    print(f"{'TOTAL':<40} {tot_lines:>6} {tot_hit:>6} {pct:>6.1f}%")
+    if pct < args.min:
+        print(f"[coverage-gate] FAIL: {pct:.1f}% < floor {args.min:.1f}%")
+        return 1
+    print(f"[coverage-gate] ok: {pct:.1f}% >= floor {args.min:.1f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

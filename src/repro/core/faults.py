@@ -35,6 +35,7 @@ Injection sites wired in this repo (see docs/api.md):
     pager.scatter     MMU fault-back-in scatter
     mmu.page_storm    MMU._take_device_page (force mode: eviction churn)
     reconfig.load     Shell.reconfigure, between snapshot and load
+    migrate.precopy   migrate_precopy(), each warm copy round
     migrate.snapshot  migrate(), stage 2
     migrate.restore   migrate(), stage 3
     migrate.replay    migrate(), stage 4

@@ -160,6 +160,16 @@ class HealthMonitor:
         with self._lock:
             self.rejections += 1
 
+    def recent_faults(self, window_s: float = 30.0) -> int:
+        """Fault events recorded within the trailing window — the fleet
+        controller's hotspot/health signal when scoring placements.
+        Bounded by the event ring (``max_events``), which is fine: a
+        member with a saturated ring is not a placement candidate."""
+        floor = time.perf_counter() - window_s
+        with self._lock:
+            return sum(1 for e in self._events
+                       if e.get("event") == "fault" and e["t"] >= floor)
+
     # -------------------------------------------------------------- status --
     def status(self) -> Dict[str, Any]:
         now = time.perf_counter()

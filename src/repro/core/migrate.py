@@ -32,6 +32,18 @@ Every ``migrate()`` round-trips the snapshot through the container
 encode/decode, so what lands on the destination is exactly what a
 wire/disk copy would carry — and the version check runs on every move.
 
+:func:`migrate_precopy` is the low-downtime variant: **warm rounds**
+ship KV pages through the chunked container stream while the source
+keeps decoding (the MMU's dirty tracking tells each round which pages
+changed since the last one — see ``MMU.dirty_snapshot``), landing them
+in pages *reserved* on the destination (``MMU.reserve_pages``).  Only
+the **freeze** pauses intake, and it snapshots just the final dirty
+delta plus CSR/queue/PRNG state (``snapshot_tenant(only_pages=...)``) —
+the destination adopts the staged pages during ``restore_seqs``, so the
+service gap is O(dirty delta) instead of O(KV footprint).  A failure in
+any warm round releases the staged pages and leaves the source serving,
+untouched; freeze-phase failures contain exactly like ``migrate()``.
+
     from repro.core.migrate import migrate
     report = migrate(src_shell, dst_shell, "gold")      # tenant or slot
     print(report.downtime_s, report.payload_bytes)
@@ -51,6 +63,7 @@ import numpy as np
 from repro.core import bitstream as B
 from repro.core.bitstream import BitstreamError
 from repro.core.faults import FaultKind, maybe_fire
+from repro.core.services.mmu import _share_key
 
 # Bumped whenever the migration header/array layout changes; a snapshot
 # from a different version is refused (BitstreamError), never guessed at.
@@ -85,6 +98,11 @@ class MigrationReport:
     restore_s: float
     replay_s: float
     downtime_s: float
+    # pre-copy extras (zero for plain stop-and-copy migrate())
+    precopy_rounds: int = 0      # warm rounds shipped before the freeze
+    precopy_pages: int = 0       # page payloads shipped warm (re-ships count)
+    precopy_bytes: int = 0       # warm-round container bytes on the wire
+    delta_pages: int = 0         # pages in the frozen final delta
 
     def to_dict(self) -> Dict[str, Any]:
         return asdict(self)
@@ -111,6 +129,25 @@ def decode_snapshot(blob: bytes) -> Tuple[Dict[str, Any], Any]:
     return header, arrays or {}
 
 
+def encode_snapshot_stream(header: Dict[str, Any], arrays: Any):
+    """Chunked form of :func:`encode_snapshot` — yields bounded chunks,
+    the payload is never duplicated in host memory."""
+    hdr = {"state_version": MIGRATION_STATE_VERSION, **header}
+    return B.encode_stream("migration", hdr, arrays=arrays)
+
+
+def decode_snapshot_stream(chunks) -> Tuple[Dict[str, Any], Any]:
+    """Chunked form of :func:`decode_snapshot` (integrity-verified
+    incrementally as chunks arrive)."""
+    _, header, arrays = B.decode_stream(chunks, expect_kind="migration")
+    ver = header.get("state_version")
+    if ver != MIGRATION_STATE_VERSION:
+        raise BitstreamError(
+            f"migration state version {ver!r} does not match this "
+            f"runtime ({MIGRATION_STATE_VERSION}); refusing to restore")
+    return header, arrays or {}
+
+
 def save_snapshot(path: str, header: Dict[str, Any], arrays: Any) -> int:
     blob = encode_snapshot(header, arrays)
     Path(path).write_bytes(blob)
@@ -122,17 +159,20 @@ def load_snapshot(path: str) -> Tuple[Dict[str, Any], Any]:
 
 
 # ------------------------------------------------------- snapshot side -----
-def snapshot_tenant(shell, slot: int) -> Tuple[Dict[str, Any], Any]:
+def snapshot_tenant(shell, slot: int, *,
+                    only_pages=None) -> Tuple[Dict[str, Any], Any]:
     """Snapshot the (already quiesced) serving tenant on ``slot``:
     engine paged state + slot port state (CSR file, cThread address map).
-    Returns the ``(header, arrays)`` pair :func:`encode_snapshot` packs."""
+    Returns the ``(header, arrays)`` pair :func:`encode_snapshot` packs.
+    ``only_pages`` restricts KV payloads to a share-key subset (the
+    pre-copy freeze passes the final dirty delta)."""
     engine = shell.engines.get(slot)
     if engine is None:
         raise MigrationError(
             f"no serving engine bound to slot {slot} on this shell "
             "(migratable tenants are paged ServingEngines created with "
             "shell=...)")
-    header, arrays = engine.snapshot_state()
+    header, arrays = engine.snapshot_state(only_pages=only_pages)
     port = shell.attach(slot)
     psnap = port.snapshot()
     header["tenant"] = shell.vfpgas[slot].tenant
@@ -192,6 +232,29 @@ def _resolve_slot(shell, target: Union[int, str]) -> int:
         f"(tenants: {tenants})")
 
 
+def _resolve_pair(src_shell, dst_shell, target: Union[int, str],
+                  dst_slot: Optional[int]):
+    """Resolve and validate a (source engine, destination engine) pair
+    for a move: both slots must host engines with matching geometry."""
+    slot = _resolve_slot(src_shell, target)
+    engine = src_shell.engines.get(slot)
+    if engine is None:
+        raise MigrationError(
+            f"no serving engine bound to source slot {slot}")
+    dslot = slot if dst_slot is None else dst_slot
+    dst_engine = dst_shell.engines.get(dslot)
+    if dst_engine is None:
+        raise MigrationError(
+            f"no serving engine bound to destination slot {dslot} — "
+            "load the app and create its engine before migrating onto it")
+    if dst_engine.geometry() != engine.geometry():
+        raise MigrationError(
+            f"geometry mismatch: source {engine.geometry()} vs "
+            f"destination {dst_engine.geometry()}")
+    tenant = engine.tenant or src_shell.vfpgas[slot].tenant
+    return slot, engine, dslot, dst_engine, tenant
+
+
 def migrate(src_shell, dst_shell, target: Union[int, str], *,
             dst_slot: Optional[int] = None,
             drain_timeout: float = 30.0) -> MigrationReport:
@@ -211,22 +274,8 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
     holds *port* traffic, and the snapshot assumes no ``step()`` is
     concurrently mutating the donated pools.
     """
-    slot = _resolve_slot(src_shell, target)
-    engine = src_shell.engines.get(slot)
-    if engine is None:
-        raise MigrationError(
-            f"no serving engine bound to source slot {slot}")
-    dslot = slot if dst_slot is None else dst_slot
-    dst_engine = dst_shell.engines.get(dslot)
-    if dst_engine is None:
-        raise MigrationError(
-            f"no serving engine bound to destination slot {dslot} — "
-            "load the app and create its engine before migrating onto it")
-    if dst_engine.geometry() != engine.geometry():
-        raise MigrationError(
-            f"geometry mismatch: source {engine.geometry()} vs "
-            f"destination {dst_engine.geometry()}")
-    tenant = engine.tenant or src_shell.vfpgas[slot].tenant
+    slot, engine, dslot, dst_engine, tenant = _resolve_pair(
+        src_shell, dst_shell, target, dst_slot)
     src_port = src_shell.attach(slot)
 
     t0 = time.perf_counter()
@@ -288,6 +337,25 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
     t_r = time.perf_counter()
 
     # -- 4. evacuate the source, replay held work on the destination --------
+    replayed = _evacuate_and_replay(src_shell, engine, src_port, dst_port,
+                                    slot=slot, tenant=tenant)
+    t_done = time.perf_counter()
+
+    return MigrationReport(
+        tenant=tenant, src_slot=slot, dst_slot=dslot,
+        n_requests=stats["requests"], n_queued=stats["queued"],
+        n_pages=stats["pages"], payload_bytes=len(blob),
+        replayed=replayed,
+        quiesce_s=t_q - t0, snapshot_s=t_s - t_q,
+        restore_s=t_r - t_s, replay_s=t_done - t_r,
+        downtime_s=t_done - t0)
+
+
+def _evacuate_and_replay(src_shell, engine, src_port, dst_port, *,
+                         slot: int, tenant: Optional[str]) -> int:
+    """Final migration stage, shared by stop-and-copy and pre-copy:
+    evacuate the source engine and replay held invocations on the
+    destination port — exactly once each, whatever fails."""
     engine.evacuate()
     pending = list(src_port.take_held())
     replayed = 0
@@ -316,16 +384,216 @@ def migrate(src_shell, dst_shell, target: Union[int, str], *,
             "source, which no longer holds the tenant's paged state"
         ) from e
     src_port.resume()                     # slot reusable, nothing held
+    return replayed
+
+
+# ----------------------------------------------------- pre-copy pipeline ----
+def _key_str(key: Tuple) -> str:
+    """JSON-safe spelling of an MMU share key: ("d", 3) -> "d:3"."""
+    return ":".join(str(x) for x in key)
+
+
+def _gather_page_payloads(engine, keys) -> Dict[Tuple, Dict[str, Any]]:
+    """Gather KV payloads for a set of MMU share keys: one batched
+    device gather for the ("d", ppage) keys (same compact-gather kernel
+    the full snapshot uses) plus the preserved host payloads for
+    ("h", hslot) keys.  Keys with no materialized bytes ("u" legacy
+    pages, host slots evicted without a pager) are skipped — exactly
+    what a full snapshot would skip."""
+    from repro.serve.paged_model import flat_page_indices, gather_kv_pages
+    mmu = engine.mmu
+    out: Dict[Tuple, Dict[str, Any]] = {}
+    dpages = sorted(k[1] for k in keys if k[0] == "d")
+    if dpages:
+        flat = flat_page_indices(dpages, engine.cfg.n_layers,
+                                 mmu.config.n_pages)
+        kv = gather_kv_pages(engine.pools, flat)
+        L = engine.cfg.n_layers
+        kk = np.asarray(kv["k"]).reshape(L, len(dpages),
+                                         *np.asarray(kv["k"]).shape[1:])
+        vv = np.asarray(kv["v"]).reshape(L, len(dpages),
+                                         *np.asarray(kv["v"]).shape[1:])
+        for i, pp in enumerate(dpages):
+            out[("d", pp)] = {"k": kk[:, i], "v": vv[:, i]}
+    for k in keys:
+        if k[0] == "h":
+            data = mmu.host_payload(k[1])
+            if data is not None:
+                out[k] = {"k": np.asarray(data["k"]),
+                          "v": np.asarray(data["v"])}
+    return out
+
+
+def migrate_precopy(src_shell, dst_shell, target: Union[int, str], *,
+                    dst_slot: Optional[int] = None,
+                    drain_timeout: float = 30.0,
+                    max_rounds: int = 6, dirty_floor: int = 1,
+                    decode_between_rounds: int = 1) -> MigrationReport:
+    """Pre-copy live migration: O(dirty delta) downtime.
+
+    Warm rounds run with the source port fully open: each round ships
+    the pages that are new or were dirtied since the previous round
+    (``MMU.dirty_snapshot``) through the chunked container stream into
+    pages *reserved* on the destination MMU, then lets the source decode
+    ``decode_between_rounds`` steps.  Rounds stop when the dirty set
+    converges to ``dirty_floor`` pages (or ``max_rounds`` hits — a write
+    rate above the copy rate can never converge; the freeze bounds it).
+    The freeze then quiesces exactly like :func:`migrate` but snapshots
+    only the final dirty delta; ``restore_state(staged=...)`` makes the
+    destination adopt the pre-staged pages, the delta overwrites the few
+    that changed, and held invocations replay.  Downtime covers the
+    freeze only.
+
+    Failure containment: a warm-round failure (including an injected
+    ``"migrate.precopy"`` fault) releases every staged page and raises —
+    the source was never paused.  Freeze-phase failures release the
+    staging (unless the destination already adopted it) and resume the
+    source, exactly like stop-and-copy.
+    """
+    slot, engine, dslot, dst_engine, tenant = _resolve_pair(
+        src_shell, dst_shell, target, dst_slot)
+    mmu, dst_mmu = engine.mmu, dst_engine.mmu
+    faults = getattr(src_shell, "faults", None)
+    src_port = src_shell.attach(slot)
+
+    # -- warm rounds: source keeps serving ----------------------------------
+    staged: Dict[Tuple, int] = {}
+    rounds = precopy_pages = precopy_bytes = 0
+    try:
+        while rounds < max_rounds:
+            # PEEK the dirty set first: if we break here, unshipped
+            # dirty flags must survive into the freeze's final delta
+            dirty = mmu.dirty_snapshot()
+            live = mmu.live_page_keys()
+            to_ship = (live - staged.keys()) | (dirty & live)
+            if not to_ship or (rounds > 0
+                               and len(to_ship) <= dirty_floor):
+                break
+            maybe_fire(faults, "migrate.precopy", slot=slot,
+                       tenant=tenant)
+            mmu.clear_dirty()
+            payloads = _gather_page_payloads(engine, to_ship)
+            chunks = list(B.encode_stream(
+                "migration",
+                {"state_version": MIGRATION_STATE_VERSION,
+                 "precopy_round": rounds},
+                arrays={"pages": {_key_str(k): v
+                                  for k, v in payloads.items()}}))
+            precopy_bytes += sum(len(c) for c in chunks)
+            _, _, rarr = B.decode_stream(chunks,
+                                         expect_kind="migration")
+            new_keys = sorted(k for k in payloads if k not in staged)
+            if new_keys:
+                staged.update(zip(new_keys,
+                                  dst_mmu.reserve_pages(len(new_keys))))
+            for k in sorted(payloads):
+                dst_engine._pager_scatter(staged[k],
+                                          rarr["pages"][_key_str(k)])
+            precopy_pages += len(payloads)
+            rounds += 1
+            for _ in range(decode_between_rounds):
+                engine.step()             # the source keeps decoding
+    except BaseException as e:
+        if staged:
+            dst_mmu.release_pages(list(staged.values()))
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="precopy")
+        raise MigrationError(
+            f"pre-copy warm phase failed: {e}; the source was never "
+            "paused and keeps serving") from e
+
+    def _abort_freeze(msg: str) -> MigrationError:
+        if staged:
+            dst_mmu.release_pages(list(staged.values()))
+        src_port.resume()
+        return MigrationError(msg)
+
+    t0 = time.perf_counter()
+    # -- freeze: quiesce (same checks as migrate()) -------------------------
+    if not src_port.quiesce(timeout=drain_timeout):
+        raise _abort_freeze(
+            f"slot {slot} failed to quiesce within {drain_timeout}s "
+            f"({src_port.inflight()} invocations in flight); migration "
+            "aborted, intake resumed")
+    if tenant is not None and not src_shell.scheduler.drain_tenant(
+            tenant, timeout=drain_timeout):
+        raise _abort_freeze(
+            f"tenant {tenant!r} still has link traffic in flight after "
+            f"{drain_timeout}s; migration aborted, intake resumed")
+    if not engine.flush_io(timeout=drain_timeout):
+        raise _abort_freeze(
+            f"engine decode-IO futures did not drain within "
+            f"{drain_timeout}s; migration aborted, intake resumed")
+    t_q = time.perf_counter()
+
+    # -- final delta snapshot: O(pages dirtied since the last round) --------
+    try:
+        maybe_fire(faults, "migrate.snapshot", slot=slot, tenant=tenant)
+        final_dirty = mmu.dirty_snapshot()
+        live = mmu.live_page_keys()
+        delta = (live - staged.keys()) | (final_dirty & live)
+        header, arrays = snapshot_tenant(src_shell, slot,
+                                         only_pages=delta)
+        chunks = list(encode_snapshot_stream(header, arrays))
+        payload_bytes = sum(len(c) for c in chunks)
+    except BaseException as e:
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="snapshot")
+        if staged:
+            dst_mmu.release_pages(list(staged.values()))
+        src_port.resume()
+        raise
+    t_s = time.perf_counter()
+
+    # -- restore: adopt staged pages, overwrite the delta -------------------
+    snap_sids = [int(sd["seq_id"]) for sd in header["mmu"]["seqs"]]
+    prev_tenant = dst_shell.vfpgas[dslot].tenant
+    dst_port = dst_shell.attach(dslot, tenant=tenant)
+    try:
+        maybe_fire(faults, "migrate.restore", slot=slot, tenant=tenant)
+        rheader, rarrays = decode_snapshot_stream(chunks)
+        stats = dst_engine.restore_state(rheader, rarrays,
+                                         staged=dict(staged))
+        _restore_port_state(dst_shell, dslot, rheader, rarrays)
+    except Exception as e:  # noqa: BLE001 — same containment as
+        # migrate(); additionally the staging is released UNLESS the
+        # destination MMU already adopted it into live sequences (then
+        # the pages belong to those mappings, not the reservation)
+        _record_migration_fault(src_shell, e, slot=slot, tenant=tenant,
+                                stage="restore")
+        if staged and not dst_mmu.live_page_keys(snap_sids):
+            dst_mmu.release_pages(list(staged.values()))
+        if prev_tenant is not None and prev_tenant != tenant:
+            dst_shell.attach(dslot, tenant=prev_tenant)   # rebind back
+        src_port.resume()
+        raise MigrationError(f"restore failed on destination: {e}") from e
+    # staged pages the final snapshot no longer references (their page
+    # was freed or evicted at the source between warm round and freeze)
+    # go back to the free pool — adopted ones are owned by sequences now
+    used = set()
+    for sd in rheader["mmu"]["seqs"]:
+        for p in sd["pages"]:
+            used.add(_share_key(int(sd["seq_id"]), p))
+    stale = [pp for k, pp in staged.items() if k not in used]
+    if stale:
+        dst_mmu.release_pages(stale)
+    t_r = time.perf_counter()
+
+    # -- evacuate + replay (shared with migrate()) --------------------------
+    replayed = _evacuate_and_replay(src_shell, engine, src_port, dst_port,
+                                    slot=slot, tenant=tenant)
     t_done = time.perf_counter()
 
     return MigrationReport(
         tenant=tenant, src_slot=slot, dst_slot=dslot,
         n_requests=stats["requests"], n_queued=stats["queued"],
-        n_pages=stats["pages"], payload_bytes=len(blob),
+        n_pages=len(used), payload_bytes=payload_bytes,
         replayed=replayed,
         quiesce_s=t_q - t0, snapshot_s=t_s - t_q,
         restore_s=t_r - t_s, replay_s=t_done - t_r,
-        downtime_s=t_done - t0)
+        downtime_s=t_done - t0,
+        precopy_rounds=rounds, precopy_pages=precopy_pages,
+        precopy_bytes=precopy_bytes, delta_pages=len(delta))
 
 
 # --------------------------------------------------- local slot recovery ----

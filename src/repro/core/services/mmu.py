@@ -207,6 +207,16 @@ class MMU(Service):
         self._host_ref: Dict[int, int] = {}       # host slot -> refs
         self._prefix_index: Dict[str, int] = {}   # chain hash -> ppage
         self._page_hash: Dict[int, str] = {}      # ppage -> chain hash
+        # pre-copy dirty tracking: physical pages whose CONTENT may have
+        # changed since the last ``clear_dirty()``.  Keys match
+        # ``_share_key``: ("d", ppage) for device pages, ("h", hslot)
+        # for host-resident payloads.  Marked on fresh allocation, token
+        # appends (``extend_seq`` tail pages), write translations, CoW
+        # copies and prefill writes (``mark_dirty_range``); transferred
+        # device<->host on evict/fault-in; dropped when the last
+        # reference dies.  One MMU backs one paged engine (enforced by
+        # ``register_pager``), so the set is per-tenant.
+        self._dirty: set = set()
         self.page_faults = 0
         self.migrations_out = 0
         self.migrations_in = 0
@@ -350,6 +360,16 @@ class MMU(Service):
                     vpage=len(se.pages), ppage=ppage))
             if grew:
                 self._bump_map(seq_id)
+            if n_tokens > 0 and se.pages:
+                # an append means the engine just wrote (or is about to
+                # write) KV at the tail: the page holding position
+                # old_length-1 (the token the decode step landed) and
+                # the new tail page are dirty for pre-copy purposes
+                lo = max(se.length - n_tokens - 1, 0) // c.page_size
+                for vp in range(lo, min(need, len(se.pages))):
+                    p = se.pages[vp]
+                    self._dirty.add(("h", p.host_slot) if p.on_host
+                                    else ("d", p.ppage))
 
     def _take_device_page(self, seq_id: int, slot: int) -> int:
         if (self._free and self.faults is not None and not self._in_storm
@@ -389,6 +409,7 @@ class MMU(Service):
                 raise PageFaultError("eviction failed to free a page")
         pp = self._free.pop()
         self._ref[pp] = 1
+        self._dirty.add(("d", pp))    # fresh pages carry new content
         return pp
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
@@ -491,6 +512,11 @@ class MMU(Service):
                             sharers.add(sid2)
                 self._host_ref[hslot] = max(self._ref.pop(pp, 1),
                                             len(sharers))
+                # dirty state follows the content to its new identity;
+                # the freed device page stops being dirty either way
+                if ("d", pp) in self._dirty:
+                    self._dirty.add(("h", hslot))
+                self._dirty.discard(("d", pp))
                 self._unregister_page(pp)    # evicted pages leave the
                 self._free.append(pp)        # prefix index: no new shares
                 self.migrations_out += 1
@@ -513,6 +539,7 @@ class MMU(Service):
             self._host_ref.pop(hslot, None)
             self._host_free.append(hslot)
             self._host_data.pop(hslot, None)
+            self._dirty.discard(("h", hslot))
         else:
             self._host_ref[hslot] = n
 
@@ -524,6 +551,7 @@ class MMU(Service):
             self._ref.pop(ppage, None)
             self._unregister_page(ppage)
             self._free.append(ppage)
+            self._dirty.discard(("d", ppage))
         else:
             self._ref[ppage] = n
 
@@ -569,6 +597,9 @@ class MMU(Service):
                 self._fault_in(seq_id, pte, slot)
             if for_write and self._ref.get(pte.ppage, 1) > 1:
                 self._cow(seq_id, pte, slot)
+            if for_write:
+                # declared mutation: the page is dirty for pre-copy
+                self._dirty.add(("d", pte.ppage))
             self.tlb.insert(seq_id, vpage, pte.ppage)
             return pte.ppage, off
 
@@ -609,6 +640,8 @@ class MMU(Service):
         self._ref[new_pp] = max(self._host_ref.pop(hslot, 1),
                                 len(sharers))
         self._host_free.append(hslot)
+        # content moved to the (already-dirty) fresh device page
+        self._dirty.discard(("h", hslot))
         self.migrations_in += 1
         for sid2 in sharers:
             self.tlb.invalidate(sid2)
@@ -715,7 +748,8 @@ class MMU(Service):
                              "pages": pages})
             return {"page_size": int(self.config.page_size), "seqs": seqs}
 
-    def restore_seqs(self, snap: Dict[str, Any], *, slot: int = 0
+    def restore_seqs(self, snap: Dict[str, Any], *, slot: int = 0,
+                     staged: Optional[Dict[Tuple, int]] = None
                      ) -> Dict[int, List[Dict[str, int]]]:
         """Rebuild snapshotted sequences on THIS MMU with fresh device
         pages (every page comes back device-resident, including pages
@@ -733,6 +767,13 @@ class MMU(Service):
         allocations on this MMU share them too.  Page-size geometry must
         match; colliding sequence ids are refused (migrating tenants
         must use disjoint id ranges, ``ServingEngine(rid_base=...)``).
+
+        ``staged`` is the pre-copy hand-off: ``{share_key: ppage}`` for
+        pages already reserved (``reserve_pages``) and filled by warm
+        rounds.  A snapshot page whose source share-key appears in
+        ``staged`` ADOPTS that page instead of allocating a fresh one —
+        its reservation reference becomes the first mapping reference,
+        so the caller must NOT also release adopted pages.
         """
         if int(snap.get("page_size", -1)) != self.config.page_size:
             raise PageFaultError(
@@ -757,7 +798,8 @@ class MMU(Service):
             # earlier in this very restore (the returned mapping would
             # dangle) — an incoming tenant must fit, it never steals
             # resident tenants' pages
-            need = len(keys)
+            need = len(keys if staged is None
+                       else keys - set(staged.keys()))
             if need > len(self._free):
                 raise PageFaultError(
                     f"destination pool has {len(self._free)} free pages "
@@ -776,7 +818,12 @@ class MMU(Service):
                         new_pp = new_map[key]          # re-share here
                         self._ref[new_pp] = self._ref.get(new_pp, 0) + 1
                     else:
-                        new_pp = self._take_device_page(sid, slot)
+                        if staged is not None and key in staged:
+                            # adopt the warm-round page: its reservation
+                            # ref (1) becomes this first mapping ref
+                            new_pp = staged[key]
+                        else:
+                            new_pp = self._take_device_page(sid, slot)
                         new_map[key] = new_pp
                         h = p.get("hash")
                         if h and h not in self._prefix_index:
@@ -794,6 +841,83 @@ class MMU(Service):
                 self._bump_map(sid)
                 mapping[sid] = pages
         return mapping
+
+    # -- pre-copy dirty tracking / staging ---------------------------------------
+    def mark_dirty_range(self, seq_id: int, start: int, end: int) -> None:
+        """Mark the pages covering token positions ``[start, end)`` as
+        dirty.  The engine calls this after landing prefill KV writes —
+        those writes go straight through the pager into pages allocated
+        earlier, so allocation-time marks alone could be cleared by a
+        pre-copy round that runs between the alloc and the write."""
+        if end <= start:
+            return
+        c: MMUConfig = self.config
+        with self._lock:
+            se = self._seqs.get(seq_id)
+            if se is None:
+                return
+            for vp in range(start // c.page_size,
+                            min(-(-end // c.page_size), len(se.pages))):
+                p = se.pages[vp]
+                self._dirty.add(("h", p.host_slot) if p.on_host
+                                else ("d", p.ppage))
+
+    def dirty_snapshot(self) -> set:
+        """The current dirty-page key set (a copy; does NOT clear —
+        pre-copy peeks first, then clears only once it commits to
+        shipping this round)."""
+        with self._lock:
+            return set(self._dirty)
+
+    def clear_dirty(self) -> None:
+        with self._lock:
+            self._dirty.clear()
+
+    def live_page_keys(self, seq_ids: Optional[List[int]] = None) -> set:
+        """Share keys (``("d", ppage)`` / ``("h", hslot)``) of every page
+        currently mapped by ``seq_ids`` (default: all sequences)."""
+        with self._lock:
+            out = set()
+            sids = self._seqs.keys() if seq_ids is None else seq_ids
+            for sid in sids:
+                se = self._seqs.get(sid)
+                if se is None:
+                    continue
+                for p in se.pages:
+                    if p.on_host:
+                        out.add(("h", p.host_slot) if p.host_slot >= 0
+                                else ("u", sid, p.vpage))
+                    else:
+                        out.add(("d", p.ppage))
+            return out
+
+    def reserve_pages(self, n: int) -> List[int]:
+        """Take ``n`` device pages out of the free pool for pre-copy
+        staging (refcount 1, no sequence mapping).  Never applies
+        eviction pressure — staging must not disturb resident tenants —
+        so it raises ``PageFaultError`` when the free pool is short."""
+        with self._lock:
+            if n > len(self._free):
+                raise PageFaultError(
+                    f"cannot reserve {n} staging pages: only "
+                    f"{len(self._free)} free (pre-copy staging never "
+                    "evicts resident tenants)")
+            pps = [self._free.pop() for _ in range(n)]
+            for pp in pps:
+                self._ref[pp] = 1
+            return pps
+
+    def release_pages(self, ppages: List[int]) -> None:
+        """Return reserved staging pages (one reference each)."""
+        with self._lock:
+            for pp in ppages:
+                self._drop_page_ref(pp)
+
+    def host_payload(self, hslot: int) -> Optional[Any]:
+        """The preserved payload stored in a host slot (None when the
+        slot was evicted without a pager)."""
+        with self._lock:
+            return self._host_data.get(hslot)
 
     # -- introspection -----------------------------------------------------------
     def utilization(self) -> Dict[str, Any]:
@@ -815,6 +939,7 @@ class MMU(Service):
                                        if r > 1),
                 "prefix_hits": self.prefix_hits,
                 "cow_faults": self.cow_faults,
+                "dirty_pages": len(self._dirty),
             }
 
     def status(self) -> Dict[str, Any]:

@@ -88,8 +88,11 @@ class BuildReport:
 
 class Shell:
     def __init__(self, config: ShellConfig,
-                 static: Optional[StaticLayer] = None, mesh=None):
+                 static: Optional[StaticLayer] = None, mesh=None,
+                 name: Optional[str] = None):
         self.config = config
+        # fleet identity: how a FleetController addresses this member
+        self.name = name or f"shell-{id(self) & 0xFFFF:04x}"
         self.static = static or StaticLayer(mesh, pcie_gbps=config.pcie_gbps)
         self.mesh = mesh
         self.services = ServiceRegistry()

@@ -63,9 +63,9 @@ from repro.configs.base import ModelConfig
 from repro.core.faults import FaultKind
 from repro.core.port import PortError
 from repro.core.services.mmu import MMU, MMUConfig
-from repro.serve.paged_model import (decode_step_paged, flat_page_indices,
-                                     gather_kv_pages, make_pools,
-                                     prefill_chunk_paged,
+from repro.serve.paged_model import (bucket_pages, decode_step_paged,
+                                     flat_page_indices, gather_kv_pages,
+                                     make_pools, prefill_chunk_paged,
                                      prefill_shared_paged,
                                      scatter_kv_pages)
 
@@ -431,6 +431,12 @@ class ServingEngine:
                 (time.perf_counter() - t0) / n_tok)
             self.prefill_obs += 1
             for _, req in inter:
+                # the chunk's KV just landed in pages allocated at
+                # admission — dirty them NOW, not at alloc time, so a
+                # pre-copy round between alloc and write can't clear
+                # the flag before the content exists
+                self.mmu.mark_dirty_range(req.rid, req.prefill_pos,
+                                          req.prefill_pos + chunk)
                 req.prefill_pos += chunk
         if finals:
             batch = []
@@ -503,6 +509,10 @@ class ServingEngine:
             jnp.asarray(seq_ids))
         first = np.asarray(first)
         now = time.perf_counter()
+        for _, req, _, wfrom in rows:
+            # prefill KV for [write_from, plen) just landed (pre-copy
+            # dirty tracking; see _prefill_chunks)
+            self.mmu.mark_dirty_range(req.rid, wfrom, len(req.prompt))
         self.ewma_prefill_s_per_tok = self._ewma(
             self.ewma_prefill_s_per_tok,
             (now - t0) / max(int(q_lens.sum()), 1))
@@ -754,8 +764,14 @@ class ServingEngine:
                 "head_dim": self.cfg.resolved_head_dim,
                 "vocab_size": self.cfg.vocab_size}
 
-    def snapshot_state(self) -> Tuple[Dict, Dict]:
+    def snapshot_state(self, *, only_pages=None) -> Tuple[Dict, Dict]:
         """Freeze this engine's paged tenant state for migration.
+
+        ``only_pages`` (a set of MMU share keys — ``("d", ppage)`` /
+        ``("h", hslot)``) restricts the shipped PAYLOADS to that subset:
+        pre-copy migrations pass the final dirty delta so the freeze
+        gathers O(delta) pages instead of the whole KV footprint.  The
+        header (page tables, requests, queue, PRNG) is always complete.
 
         Returns ``(header, arrays)``: a JSON-safe header (in-flight and
         queued requests, the MMU page-table snapshot, the gather order of
@@ -786,6 +802,9 @@ class ServingEngine:
             for p in sd["pages"]:
                 if p["on_host"]:
                     hs = int(p.get("host_slot", -1))
+                    if (only_pages is not None and hs >= 0
+                            and ("h", hs) not in only_pages):
+                        continue
                     key = (f"h:{hs}" if hs >= 0
                            else f"u:{sd['seq_id']}:{p['vpage']}")
                     if key in host_pages:
@@ -798,6 +817,9 @@ class ServingEngine:
                             "v": np.asarray(data["v"])}
                 elif p["ppage"] not in seen_pp:
                     seen_pp.add(p["ppage"])
+                    if (only_pages is not None
+                            and ("d", p["ppage"]) not in only_pages):
+                        continue
                     pages.append({"ppage": p["ppage"]})
         header = {
             "geometry": self.geometry(),
@@ -809,23 +831,49 @@ class ServingEngine:
         }
         arrays: Dict = {"rng": np.asarray(self.rng)}
         if pages:
-            flat = flat_page_indices([p["ppage"] for p in pages],
-                                     self.cfg.n_layers,
-                                     self.mmu.config.n_pages)
-            kv = gather_kv_pages(self.pools, flat)
-            arrays["kv_k"] = np.asarray(kv["k"])
-            arrays["kv_v"] = np.asarray(kv["v"])
+            pps = [p["ppage"] for p in pages]
+            L = self.cfg.n_layers
+            if only_pages is not None:
+                # latency-critical freeze window (pre-copy delta): pad
+                # the gather to a power-of-two bucket so freezes with
+                # slightly different delta sizes hit one compiled
+                # gather instead of retracing inside the downtime gap;
+                # the shipped arrays are trimmed back to the real count
+                nb = bucket_pages(len(pps))
+                flat = flat_page_indices(pps + [pps[-1]] * (nb - len(pps)),
+                                         L, self.mmu.config.n_pages)
+                kv = gather_kv_pages(self.pools, flat)
+
+                def _trim(x):
+                    x = np.asarray(x).reshape(L, nb, *x.shape[1:])
+                    return np.ascontiguousarray(
+                        x[:, :len(pps)]).reshape(L * len(pps),
+                                                 *x.shape[2:])
+                arrays["kv_k"] = _trim(kv["k"])
+                arrays["kv_v"] = _trim(kv["v"])
+            else:
+                flat = flat_page_indices(pps, L, self.mmu.config.n_pages)
+                kv = gather_kv_pages(self.pools, flat)
+                arrays["kv_k"] = np.asarray(kv["k"])
+                arrays["kv_v"] = np.asarray(kv["v"])
         if host_pages:
             arrays["host_pages"] = host_pages
         return header, arrays
 
-    def restore_state(self, header: Dict, arrays: Dict) -> Dict[str, int]:
+    def restore_state(self, header: Dict, arrays: Dict, *,
+                      staged=None) -> Dict[str, int]:
         """Adopt a migrated tenant: fresh page allocation on OUR MMU,
         block-table rebuild (dirty rows upload on the next view), KV
         payload scattered to the new physical pages, decode state synced,
         PRNG stream adopted.  In-flight requests land on their original
         slot index when free (keeps the sampled noise stream aligned
-        row-for-row), else the first free slot."""
+        row-for-row), else the first free slot.
+
+        ``staged`` (pre-copy): ``{source share key: our ppage}`` of
+        pages already filled by warm rounds — forwarded to
+        ``MMU.restore_seqs`` so those mappings adopt the staged pages;
+        the delta payloads in ``arrays`` then overwrite exactly the
+        pages that changed after their last warm copy."""
         g = header["geometry"]
         mine = self.geometry()
         if g != mine:
@@ -839,7 +887,8 @@ class ServingEngine:
             raise ValueError(
                 f"destination engine has {len(free)} free slots for "
                 f"{len(reqs)} in-flight migrated requests")
-        mapping = self.mmu.restore_seqs(header["mmu"], slot=self.slot)
+        mapping = self.mmu.restore_seqs(header["mmu"], slot=self.slot,
+                                        staged=staged)
         # shared source pages restored to ONE destination page each:
         # index the new ppage by old device ppage / host slot so every
         # shipped payload (deduped at snapshot) scatters exactly once
@@ -855,10 +904,30 @@ class ServingEngine:
         n_pages = self.mmu.config.n_pages
         if header["pages"]:
             new_pps = [by_old[p["ppage"]] for p in header["pages"]]
+            kk = np.asarray(arrays["kv_k"])
+            vv = np.asarray(arrays["kv_v"])
+            if staged is not None:
+                # pre-copy delta restore runs inside the freeze window:
+                # pad to the same power-of-two bucket as the snapshot
+                # gather (pad = last real page repeated; duplicate
+                # indices carry identical rows, so the extra scatter
+                # writes are no-ops) to avoid a per-delta-size retrace
+                L = self.cfg.n_layers
+                nb = bucket_pages(len(new_pps))
+                pad = nb - len(new_pps)
+                if pad:
+                    def _pad(x):
+                        x = x.reshape(L, -1, *x.shape[1:])
+                        x = np.concatenate(
+                            [x, np.repeat(x[:, -1:], pad, axis=1)],
+                            axis=1)
+                        return x.reshape(L * nb, *x.shape[2:])
+                    kk, vv = _pad(kk), _pad(vv)
+                    new_pps = new_pps + [new_pps[-1]] * pad
             flat = flat_page_indices(new_pps, self.cfg.n_layers, n_pages)
             self.pools = self._adopt_pools(scatter_kv_pages(
-                self.pools, flat, {"k": jnp.asarray(arrays["kv_k"]),
-                                   "v": jnp.asarray(arrays["kv_v"])}))
+                self.pools, flat, {"k": jnp.asarray(kk),
+                                   "v": jnp.asarray(vv)}))
         for key, data in (arrays.get("host_pages") or {}).items():
             if key.startswith("h:"):
                 new_pp = by_hslot[int(key[2:])]

@@ -308,6 +308,26 @@ class ServingGateway:
             self.completed.append(stream)
             del self.streams[req.rid]
 
+    def adopt_streams(self, src: "ServingGateway") -> Dict[str, int]:
+        """Take over another gateway's live ``TokenStream``s after its
+        tenant migrated to OUR engine.
+
+        Request ids survive ``restore_state`` (in-flight and demoted
+        chunk-prefill requests keep their rids), so moving the rid ->
+        stream map is all the re-route needs: the next token our engine
+        emits for a moved rid lands in the SAME ``TokenStream`` object
+        the caller has been reading — no token lost, none duplicated.
+        Gateway-queued (not yet dispatched) pendings move too and will
+        dispatch here with fresh rids.  Already-completed streams stay
+        with the source gateway's history."""
+        n_streams, n_queued = len(src.streams), len(src.queue)
+        self.streams.update(src.streams)
+        src.streams.clear()
+        self.queue.extend(src.queue)
+        src.queue.clear()
+        self.submitted += n_streams + n_queued
+        return {"streams": n_streams, "queued": n_queued}
+
     # ------------------------------------------------------------- drive ---
     def step(self) -> int:
         """One engine step (backfill runs inside via the hook)."""

@@ -128,6 +128,20 @@ def flat_page_indices(ppages, n_layers: int, n_pages: int) -> jnp.ndarray:
     return (base + pp[None, :]).reshape(-1)
 
 
+def bucket_pages(n: int, *, floor: int = 4) -> int:
+    """Round a page-transfer count up to the next power of two (at least
+    ``floor``).  The pre-copy freeze window gathers/scatters the dirty
+    delta, whose size jitters by a page or two between moves — padding
+    the transfer to a bucket makes those shapes collide, so the compiled
+    gather/scatter is reused instead of retraced inside the downtime
+    window (pad pages repeat the last real page; a duplicate scatter of
+    identical rows is a no-op)."""
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
 @jax.jit
 def gather_kv_pages(pools, flat_idx):
     """Device-side compact gather of live KV pages.

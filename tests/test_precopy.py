@@ -1,0 +1,337 @@
+"""Pre-copy migration surface: MMU dirty tracking, container integrity,
+transfer-shape buckets, warm-round failure containment, and the
+cross-seed determinism matrix for migrate/recover parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (FaultKind, FaultPlan, FaultSpec, MigrationError,
+                        Shell, ShellConfig)
+from repro.core import bitstream as B
+from repro.core.bitstream import BitstreamError
+from repro.core.migrate import migrate_precopy
+from repro.core.services import MMUConfig
+from repro.core.services.mmu import MMU
+from repro.models import transformer as T
+from repro.serve.engine import ServingEngine
+from repro.serve.paged_model import bucket_pages
+
+PAGE = 16
+POOL = 128
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _shell(n_vfpgas=2):
+    s = Shell(ShellConfig.make(
+        services={"mmu": MMUConfig(page_size=PAGE, n_pages=POOL)},
+        n_vfpgas=n_vfpgas))
+    s.build()
+    return s
+
+
+def _engine(cfg, params, shell, *, rid_base=0, seed=0):
+    return ServingEngine(cfg, params, shell.services.get("mmu"),
+                         max_batch=3, max_len=128, shell=shell, slot=0,
+                         tenant="gold", rid_base=rid_base, seed=seed)
+
+
+# ==================================================== MMU dirty bitmap =====
+def test_dirty_bitmap_alloc_extend_write_semantics():
+    """Fresh pages, appended tails, and for-write translations all mark
+    dirty; ``dirty_snapshot`` peeks without clearing; ``clear_dirty`` is
+    the only way flags drop (short of the page dying)."""
+    mmu = MMU(MMUConfig(page_size=4, n_pages=16))
+    mmu.alloc_seq(1, 10)                        # 3 fresh pages
+    keys = {("d", p.ppage) for p in mmu._seqs[1].pages}
+    assert mmu.dirty_snapshot() == keys
+    assert mmu.dirty_snapshot() == keys          # peek-only, no clear
+    assert mmu.utilization()["dirty_pages"] == 3
+    mmu.clear_dirty()
+    assert mmu.dirty_snapshot() == set()
+    # append: the tail page the decode step wrote is dirty again
+    mmu.extend_seq(1, 1)
+    tail = mmu._seqs[1].pages[-1]
+    assert ("d", tail.ppage) in mmu.dirty_snapshot()
+    # a write-intent translation marks its page
+    mmu.clear_dirty()
+    pp, _ = mmu.translate(1, 0, for_write=True)
+    assert ("d", pp) in mmu.dirty_snapshot()
+    # explicit range marking (the chunked-prefill path) covers the pages
+    # holding [start, end)
+    mmu.clear_dirty()
+    mmu.mark_dirty_range(1, 0, 11)
+    assert len(mmu.dirty_snapshot()) == len(mmu._seqs[1].pages)
+    # a freed sequence's pages drop their flags with the pages
+    mmu.free_seq(1)
+    assert mmu.dirty_snapshot() == set()
+
+
+def test_dirty_bitmap_cow_marks_private_copy_not_canonical():
+    """A CoW break marks the NEW private page dirty; the canonical
+    shared page the other sequence keeps is untouched."""
+    mmu = MMU(MMUConfig(page_size=4, n_pages=32))
+    prompt = list(range(10, 22))                 # 3 full pages
+    mmu.alloc_seq(1, 12, prompt_tokens=prompt)
+    assert mmu.alloc_seq(2, 12, prompt_tokens=prompt) == 12  # all shared
+    shared_pp = mmu._seqs[2].pages[0].ppage
+    assert mmu._ref[shared_pp] == 2
+    mmu.clear_dirty()
+    new_pp, _ = mmu.translate(2, 0, for_write=True)
+    assert new_pp != shared_pp                   # the copy broke off
+    d = mmu.dirty_snapshot()
+    assert ("d", new_pp) in d
+    assert ("d", shared_pp) not in d
+    assert mmu._ref[shared_pp] == 1 and mmu._ref[new_pp] == 1
+
+
+def test_dirty_bitmap_follows_group_eviction_and_fault_in():
+    """Evicting a dirty shared page moves the flag to its host-slot
+    identity (the content is what's dirty, not the address); faulting it
+    back in retires the host flag with the slot."""
+    mmu = MMU(MMUConfig(page_size=4, n_pages=4, host_pool_pages=8))
+    prompt = list(range(20, 28))                 # 2 full pages
+    mmu.alloc_seq(1, 8, prompt_tokens=prompt)
+    assert mmu.alloc_seq(2, 8, prompt_tokens=prompt) == 8
+    mmu.clear_dirty()
+    mmu.mark_dirty_range(1, 4, 8)                # tail page dirty
+    tail_pp = mmu._seqs[1].pages[1].ppage
+    assert ("d", tail_pp) in mmu.dirty_snapshot()
+    mmu.alloc_seq(9, 4 * (len(mmu._free) + 1))   # pressure -> group evict
+    p1, p2 = mmu._seqs[1].pages[1], mmu._seqs[2].pages[1]
+    assert p1.on_host and p2.on_host and p1.host_slot == p2.host_slot
+    assert mmu._host_ref[p1.host_slot] == 2      # refs moved as a group
+    d = mmu.dirty_snapshot()
+    assert ("h", p1.host_slot) in d
+    # the freed device page was recycled to the pressure seq: if its
+    # address is dirty again, that flag belongs to the NEW owner
+    if ("d", tail_pp) in d:
+        assert tail_pp in {p.ppage for p in mmu._seqs[9].pages
+                           if not p.on_host}
+    hslot = p1.host_slot
+    mmu.free_seq(9)                              # room to fault back in
+    mmu.translate(1, 4)
+    assert not mmu._seqs[1].pages[1].on_host
+    assert ("h", hslot) not in mmu.dirty_snapshot()
+
+
+def test_dirty_clean_pages_skippable_is_sound(served):
+    """The pre-copy soundness pin at the engine level: pages NOT in the
+    dirty set after ``clear_dirty`` are byte-identical to their state at
+    clear time — shipping only the dirty delta loses nothing."""
+    cfg, params = served
+    shell = _shell()
+    eng = _engine(cfg, params, shell)
+    for n in (18, 40):
+        eng.submit(list(range(3, 3 + n)), max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    mmu = eng.mmu
+    live = mmu.live_page_keys()
+    before = {k: eng._pager_gather(k[1]) for k in live if k[0] == "d"}
+    mmu.clear_dirty()
+    for _ in range(2):                           # decode dirties tails
+        eng.step()
+    dirty = mmu.dirty_snapshot()
+    clean = [k for k in before if k not in dirty
+             and k in mmu.live_page_keys()]
+    assert clean, "expected some page to stay clean across two steps"
+    assert dirty, "decode steps must dirty the tail pages"
+    for k in clean:
+        after = eng._pager_gather(k[1])
+        np.testing.assert_array_equal(np.asarray(before[k]["k"]),
+                                      np.asarray(after["k"]))
+        np.testing.assert_array_equal(np.asarray(before[k]["v"]),
+                                      np.asarray(after["v"]))
+    shell.close()
+
+
+# ============================================== container integrity ========
+def test_container_integrity_tamper_and_unknown_algo_rejected():
+    blob = B.encode("app", {"x": 1}, arrays={"a": np.arange(64)})
+    kind, header, arrays = B.decode(blob)        # round-trip intact
+    assert kind == "app" and header == {"x": 1}
+    np.testing.assert_array_equal(arrays["a"], np.arange(64))
+    # one flipped payload bit -> refused before np.load ever runs
+    tampered = bytearray(blob)
+    tampered[-3] ^= 0xFF
+    with pytest.raises(BitstreamError, match="integrity check failed"):
+        B.decode(bytes(tampered))
+    # a forged algo name is refused outright, not skipped (treating it
+    # as "no hash" would let a forger strip verification)
+    forged = blob.replace(b'"algo": "blake2b"', b'"algo": "md5x512"', 1)
+    assert forged != blob
+    with pytest.raises(BitstreamError, match="unsupported bitstream "
+                                             "integrity algo"):
+        B.decode(forged)
+    # pre-integrity containers (no stanza) stay loadable
+    import json
+    import struct
+    hjson = json.dumps({"kind": "raw", "header": {"v": 7},
+                        "arrays": None}).encode()
+    legacy = (B.MAGIC + struct.pack("<HI", B.FORMAT_VERSION, len(hjson))
+              + hjson)
+    assert B.decode(legacy)[1] == {"v": 7}
+
+
+def test_container_stream_codec_chunking_invariant():
+    """decode_stream must not care where chunk boundaries fall, and the
+    incremental hash must equal the one-shot hash."""
+    header = {"nested": {"deep": [1, 2, 3]}}
+    arrays = {"kv": np.random.default_rng(0).normal(size=(6, 8)),
+              "small": np.arange(3, dtype=np.int32)}
+    blob = B.encode("migration", header, arrays)
+    for chunk_bytes in (7, 1 << 20):
+        chunks = list(B.encode_stream("migration", header, arrays,
+                                      chunk_bytes=chunk_bytes))
+        assert b"".join(chunks) == blob
+        kind, h2, a2 = B.decode_stream(chunks, expect_kind="migration")
+        assert kind == "migration" and h2 == header
+        np.testing.assert_array_equal(a2["kv"], arrays["kv"])
+    # tampering a mid-stream chunk fails the incremental hash too
+    chunks = list(B.encode_stream("migration", header, arrays,
+                                  chunk_bytes=64))
+    bad = bytearray(chunks[-1])
+    bad[0] ^= 0x01
+    with pytest.raises(BitstreamError, match="integrity check failed"):
+        B.decode_stream(chunks[:-1] + [bytes(bad)])
+
+
+def test_bucket_pages_powers_of_two():
+    assert bucket_pages(0) == 4 and bucket_pages(1) == 4
+    assert bucket_pages(4) == 4
+    assert bucket_pages(5) == 8 and bucket_pages(8) == 8
+    assert bucket_pages(9) == 16
+    assert bucket_pages(3, floor=1) == 4 and bucket_pages(1, floor=1) == 1
+
+
+# ================================================= pre-copy end to end =====
+def test_precopy_mid_decode_token_parity(served):
+    """The pre-copy analogue of the stop-and-copy acceptance pin: warm
+    rounds ship pages while the source decodes, the freeze ships only
+    the delta, and the destination continues token-for-token."""
+    cfg, params = served
+    src, dst = _shell(), _shell()
+    eng_src = _engine(cfg, params, src)
+    eng_dst = _engine(cfg, params, dst, rid_base=1000)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    reqs = [(list(range(3, 8)), 0.0), (list(range(3, 20)), 0.0),
+            (list(range(3, 12)), 1.3)]
+    for prompt, temp in reqs:
+        eng_src.submit(prompt, max_new_tokens=12, temperature=temp)
+        oracle.submit(prompt, max_new_tokens=12, temperature=temp)
+    for _ in range(4):                           # mid-decode
+        eng_src.step()
+        oracle.step()
+    report = migrate_precopy(src, dst, "gold", max_rounds=4)
+    assert report.precopy_rounds >= 1
+    assert report.precopy_pages >= report.n_pages
+    assert 0 < report.delta_pages <= report.n_pages
+    # the source keeps decoding DURING warm rounds, so oracle steps must
+    # match: run the oracle forward by the same number of steps
+    for _ in range(report.precopy_rounds):
+        oracle.step()
+    while eng_dst.pending():
+        eng_dst.step()
+    while oracle.pending():
+        oracle.step()
+    got = {r.rid: r.out_tokens for r in eng_dst.completed}
+    want = {r.rid: r.out_tokens for r in oracle.completed}
+    assert got == want
+    # the source is fully evacuated, the destination owns every page
+    assert src.services.get("mmu").utilization()["pages_used"] == 0
+    assert eng_src.active == 0
+    src.close()
+    dst.close()
+
+
+def test_precopy_warm_fault_releases_staging_source_serves(served):
+    """A warm-round fault (second round, staging populated) aborts the
+    move, releases every staged destination page, and leaves the source
+    serving — it was never paused."""
+    cfg, params = served
+    src, dst = _shell(), _shell()
+    eng_src = _engine(cfg, params, src)
+    _engine(cfg, params, dst, rid_base=1000)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128)
+    for prompt in (list(range(3, 20)), list(range(3, 40))):
+        eng_src.submit(prompt, max_new_tokens=10)
+        oracle.submit(prompt, max_new_tokens=10)
+    for _ in range(2):
+        eng_src.step()
+        oracle.step()
+    # after=1: round 0 stages the full footprint, round 1 fires
+    src.set_fault_plan(FaultPlan([FaultSpec(
+        FaultKind.MIGRATION_FAIL, site="migrate.precopy", after=1)]))
+    with pytest.raises(MigrationError, match="keeps serving"):
+        migrate_precopy(src, dst, "gold", max_rounds=4)
+    src.set_fault_plan(None)
+    # every reserved destination page went back to the free pool
+    du = dst.services.get("mmu").utilization()
+    assert du["pages_used"] == 0
+    assert not dst.services.get("mmu")._ref
+    # one decode step ran between round 0 and the round-1 fault
+    oracle.step()
+    while eng_src.pending():
+        eng_src.step()
+    while oracle.pending():
+        oracle.step()
+    got = {r.rid: r.out_tokens for r in eng_src.completed}
+    want = {r.rid: r.out_tokens for r in oracle.completed}
+    assert got == want                           # source never skipped a beat
+    src.close()
+    dst.close()
+
+
+# =============================================== cross-seed determinism ====
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_cross_seed_recover_and_precopy_parity(served, seed):
+    """The single-seed parity pins in test_migrate/test_faults, swept
+    over a 4-seed matrix: in-place recovery followed by a pre-copy
+    migration reproduces the oracle's sampled token streams for every
+    PRNG seed, with zero lost or duplicated completions."""
+    cfg, params = served
+    src, dst = _shell(), _shell()
+    eng_src = _engine(cfg, params, src, seed=seed)
+    eng_dst = _engine(cfg, params, dst, rid_base=1000, seed=seed)
+    oracle = ServingEngine(cfg, params,
+                           MMU(MMUConfig(page_size=PAGE, n_pages=POOL)),
+                           max_batch=3, max_len=128, seed=seed)
+    reqs = [(list(range(3, 10)), 0.0), (list(range(3, 24)), 0.9),
+            (list(range(3, 15)), 1.3)]
+    for prompt, temp in reqs:
+        eng_src.submit(prompt, max_new_tokens=10, temperature=temp)
+        oracle.submit(prompt, max_new_tokens=10, temperature=temp)
+    for _ in range(2):
+        eng_src.step()
+        oracle.step()
+    rep_r = src.recover_slot(0)                  # KV-intact local recovery
+    assert rep_r.n_requests == 3
+    for _ in range(2):
+        eng_src.step()
+        oracle.step()
+    rep_m = migrate_precopy(src, dst, "gold", max_rounds=3)
+    for _ in range(rep_m.precopy_rounds):        # source decoded per round
+        oracle.step()
+    while eng_dst.pending():
+        eng_dst.step()
+    while oracle.pending():
+        oracle.step()
+    got = {r.rid: r.out_tokens for r in eng_dst.completed}
+    want = {r.rid: r.out_tokens for r in oracle.completed}
+    assert got == want
+    assert len(eng_dst.completed) == 3           # exactly once each
+    assert src.services.get("mmu").utilization()["pages_used"] == 0
+    src.close()
+    dst.close()
